@@ -1,0 +1,48 @@
+"""§4.7 analogue: preemption-flush budget (the paper's battery sizing).
+
+Measures the worst-case redundancy flush after a period of dirty
+accumulation, projects it onto TPU v5e HBM bandwidth via the policy model,
+and prices the paper's battery equivalents for reference.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import Region, emit, key_stream
+from repro.core import policy
+
+
+def run(n_rows: int = 8192):
+    rows = []
+    for wl, pattern, period in (("ycsb_a_like", "zipf", 16),
+                                ("rtree_like_sparse", "uniform", 16),
+                                ("fio_random_p60", "uniform", 60)):
+        r = Region(n_rows=n_rows, mode="vilamb", period=period)
+        keys = key_stream(pattern, period + 1, 256, n_rows)
+        vals = jnp.ones((256, 1024), jnp.float32)
+        heap, red = r.heap, r.red
+        _ = r.red_step(heap, jax.tree.map(jnp.copy, red))  # warm (donating a copy)
+        for i in range(period):          # accumulate a full period of dirt
+            heap, red = r.write(heap, red, keys[i], vals)
+        jax.block_until_ready(heap)
+        stats = jax.tree.map(int, r.engine.dirty_stats(red))
+        est = policy.estimate_flush(stats, {"heap": r.meta.bytes_per_block},
+                                    r.meta.stripe_data_blocks)
+        t0 = time.perf_counter()
+        red = r.red_step(heap, red)
+        jax.block_until_ready(jax.tree.leaves(red))
+        wall = time.perf_counter() - t0
+        rows.append((f"battery/{wl}/flush_wall", wall * 1e6,
+                     f"{stats['heap']['dirty_blocks']} dirty pages"))
+        rows.append((f"battery/{wl}/flush_v5e_model", est.seconds * 1e6,
+                     f"{est.energy_kj*1e3:.3f} J @500W; "
+                     f"ultracap ${est.ultracap_dollars:.4f} "
+                     f"liion ${est.liion_dollars:.6f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,56 @@
+"""Fig. 9 analogue: cost of checking/clearing dirty bits vs batch size and
+region size.
+
+The paper's syscall/page-walk/TLB components become: mark (scatter-OR into
+the packed bitvector), snapshot+clear, and the masked redundancy update the
+bits gate. Batching -> bitvector word granularity per op.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import Region, emit, key_stream
+from repro.core import bits
+
+
+def _timed(fn, *args, iters=100):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    # (a) region-size scaling at fixed batch (paper fig 9a)
+    for n_rows in (1024, 4096, 16384):
+        r = Region(n_rows=n_rows, mode="vilamb", period=1)
+        keys = key_stream("uniform", 2, 512, n_rows)[0]
+        mark = jax.jit(lambda red, k: r.engine.mark_dirty(
+            red, {"heap": jnp.zeros((n_rows,), bool).at[k].set(True)}))
+        us = _timed(mark, r.red, keys)
+        rows.append((f"fig9a_dirty_mark/rows{n_rows}", us, f"{n_rows*4096//2**20} MiB region"))
+        heap, red = r.write(r.heap, r.red, keys, jnp.ones((512, 1024)))
+        us2 = _timed(lambda h, rd: r.engine.redundancy_step({"heap": h}, rd), heap, red)
+        rows.append((f"fig9a_check_clear_update/rows{n_rows}", us2,
+                     "snapshot+clear+masked update"))
+    # (b) batch-size scaling at fixed region (paper fig 9b)
+    n_rows = 8192
+    for batch in (32, 128, 512, 2048):
+        r = Region(n_rows=n_rows, mode="vilamb", period=1)
+        keys = key_stream("uniform", 2, batch, n_rows)[0]
+        heap, red = r.write(r.heap, r.red, keys, jnp.ones((batch, 1024)))
+        us = _timed(lambda h, rd: r.engine.redundancy_step({"heap": h}, rd), heap, red)
+        rows.append((f"fig9b_update_batch/batch{batch}", us,
+                     f"{us/batch:.2f} us/page amortized"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

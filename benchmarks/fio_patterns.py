@@ -1,0 +1,53 @@
+"""Fig. 8 analogue: raw-buffer read/write with uniform/seq/zipf patterns.
+
+fio treats the DAX file as raw bytes — no transactional API, which is
+exactly the workload Pangolin cannot serve (its programming-model
+restriction); Vilamb attaches transparently. We therefore compare
+No-Redundancy vs Vilamb at several update periods, as the paper does.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import Region, emit, key_stream
+
+
+def run(steps: int = 24, n_rows: int = 4096, batch: int = 64):
+    rows = []
+    vals = jnp.full((batch, 1024), 3.0, jnp.float32)
+    results = {}
+    for pattern in ("uniform", "seq", "zipf"):
+        for mode, period in (("none", 0), ("vilamb", 2), ("vilamb", 8), ("vilamb", 32)):
+            r = Region(n_rows=n_rows, mode=mode, period=max(period, 1))
+            keys = key_stream(pattern, steps + 1, batch, n_rows)
+            dt = r.run_writes(keys, vals)
+            tput = steps * batch * 4096 / dt / 2**20  # MiB/s written
+            results[(pattern, mode, period)] = tput
+            tag = mode if mode == "none" else f"vilamb_p{period}"
+            rows.append((f"fig8_fio_write/{pattern}/{tag}", dt / steps * 1e6,
+                         f"{tput:.0f} MiB/s"))
+        # read-only: dirty-bit checking cost only
+        r = Region(n_rows=n_rows, mode="vilamb", period=8)
+        keys = key_stream(pattern, steps + 1, batch, n_rows)
+        out = r.read(r.heap, keys[0]); jax.block_until_ready(out)
+        r.red = r.red_step(r.heap, r.red)  # warm the periodic pass
+        t0 = time.perf_counter()
+        for i in range(1, steps + 1):
+            out = r.read(r.heap, keys[i])
+            if i % 8 == 0:
+                r.red = r.red_step(r.heap, r.red)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        rows.append((f"fig8_fio_read/{pattern}/vilamb_p8", dt / steps * 1e6,
+                     f"{steps*batch*4096/dt/2**20:.0f} MiB/s"))
+    for pattern in ("uniform", "seq", "zipf"):
+        ovh = 1 - results[(pattern, "vilamb", 32)] / results[(pattern, "none", 0)]
+        rows.append((f"fig8_fio_write/{pattern}/overhead_p32", 0.0, f"{ovh*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,46 @@
+"""Fig. 6 analogue: per-op transactional latencies (alloc/overwrite/dealloc)
+for 64 B and 4 KB objects."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import Region, emit
+
+
+def _timed_threaded(write, heap, red, keys, val, iters=30):
+    """Time the write op while threading (donated) state through."""
+    heap, red = write(heap, red, keys, val)
+    jax.block_until_ready(heap)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        heap, red = write(heap, red, keys, val)
+    jax.block_until_ready(heap)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(n_rows: int = 2048):
+    rows = []
+    for size_name, elems in (("64B", 16), ("4KB", 1024)):
+        for mode in ("none", "sync", "vilamb"):
+            lats = {}
+            for op in ("alloc", "overwrite", "dealloc"):
+                r = Region(n_rows=n_rows, mode=mode, period=8)
+                keys = jnp.arange(8, dtype=jnp.int32)
+                if op == "dealloc":
+                    val = jnp.zeros((8, 1024), jnp.float32)
+                elif elems < 1024:  # small object: partial-row write
+                    val = jnp.asarray(r.heap[keys]).at[:, :elems].set(1.0)
+                else:
+                    val = jnp.ones((8, 1024), jnp.float32)
+                lats[op] = _timed_threaded(r.write, r.heap, r.red, keys, val)
+            for op, lat in lats.items():
+                rows.append((f"fig6_latency/{op}/{size_name}/{mode}", lat,
+                             f"{lat:.1f} us/txn-batch"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,32 @@
+"""Fig. 7 analogue: overwrite throughput vs thread count (64 B / 4 KB)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import Region, emit, key_stream
+
+
+def run(steps: int = 20, n_rows: int = 4096):
+    rows = []
+    results = {}
+    for size_name, elems in (("64B", 16), ("4KB", 1024)):
+        for threads in (1, 8, 32):
+            batch = 8 * threads
+            for mode, period in (("none", 0), ("sync", 0), ("vilamb", 8)):
+                r = Region(n_rows=n_rows, mode=mode, period=max(period, 1))
+                keys = key_stream("uniform", steps + 1, batch, n_rows)
+                vals = jnp.full((batch, 1024), 2.0, jnp.float32)
+                dt = r.run_writes(keys, vals)
+                ops = steps * batch / dt
+                results[(size_name, mode, threads)] = ops
+                rows.append((f"fig7_overwrite/{size_name}/{mode}/threads{threads}",
+                             dt / steps * 1e6, f"{ops:.0f} ops/s"))
+    for size_name in ("64B", "4KB"):
+        v = results[(size_name, "vilamb", 32)] / results[(size_name, "sync", 32)]
+        rows.append((f"fig7_overwrite/{size_name}/vilamb_over_pangolin_32t", 0.0,
+                     f"{v:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

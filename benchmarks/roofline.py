@@ -1,0 +1,68 @@
+"""§Roofline: assemble the per-(arch x shape x mesh) table from dry-run JSON."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def frac_of(r) -> float:
+    """Roofline fraction; decode cells use the memory-bound form (useful
+    bytes = params+caches read once / HLO bytes), since one-token steps have
+    negligible FLOPs by construction."""
+    rl = r["roofline"]
+    if r["shape"].endswith(("decode_32k", "long_500k")) or r["shape"].startswith(("decode", "long")):
+        hm = r.get("hbm_model", {})
+        useful_bytes = hm.get("params", 0) + hm.get("caches", 0)
+        if useful_bytes and rl["hlo_bytes_per_chip"]:
+            mem_frac = useful_bytes / rl["hlo_bytes_per_chip"]
+            # bound by the dominant term: memory vs collective
+            dom = max(rl["memory_s"], rl["collective_s"], rl["compute_s"])
+            return mem_frac * rl["memory_s"] / dom
+    return rl["roofline_fraction"]
+
+
+def table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bottleneck | "
+        "MODEL/HLO | roofline frac | fits 16G | accum |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(mesh):
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | — | — |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"{rl['bottleneck']} | {rl['useful_ratio']:.2f} | "
+            f"{frac_of(r):.4f} | {r.get('fits_16g')} | "
+            f"{r.get('accum_steps', 1)} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for r in load_records("single"):
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                     f"{rl['bottleneck']}-bound frac={rl['roofline_fraction']:.4f}"))
+    if not rows:
+        rows.append(("roofline/none", 0.0, "run repro.launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table("single"))

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (absolute wall numbers are CPU;
+cross-mode ratios reproduce the paper's claims). Roofline terms come from
+the dry-run artifacts (see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from . import (battery, dirty_cost, fio_patterns, insert_throughput,
+                   kernel_bench, mttdl_bench, op_latency, overwrite_scaling,
+                   roofline, ycsb)
+    from .common import emit
+
+    modules = [
+        ("fig1/fig5 insert throughput", insert_throughput),
+        ("fig4 ycsb", ycsb),
+        ("fig6 op latency", op_latency),
+        ("fig7 overwrite scaling", overwrite_scaling),
+        ("fig8 fio patterns", fio_patterns),
+        ("fig9 dirty-bit cost", dirty_cost),
+        ("sec4.7 battery", battery),
+        ("sec4.8 mttdl", mttdl_bench),
+        ("kernel fusion", kernel_bench),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    for title, mod in modules:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            emit(rows)
+        except Exception as e:  # keep the harness running
+            print(f"{title},0,ERROR {type(e).__name__}: {e}")
+        print(f"# [{title}] {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

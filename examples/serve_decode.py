@@ -1,0 +1,42 @@
+"""Serve a small model with batched requests; the paged KV cache is
+protected by Vilamb (page-granular dirty tracking, periodic redundancy,
+scrubbing between batches).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import flatten_dict
+from repro.configs import get_smoke
+from repro.core import RedundancyConfig, RedundancyEngine
+from repro.models import build_model
+from repro.serve import Server
+
+BATCH, PROMPT, GEN = 4, 24, 40
+
+cfg = get_smoke("glm4-9b")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+max_len = PROMPT + GEN + 1
+
+caches0 = jax.eval_shape(lambda: model.init_caches(BATCH, max_len, 0))
+engine = RedundancyEngine(flatten_dict(caches0),
+                          RedundancyConfig(mode="vilamb"))
+server = Server(model=model, engine=engine, mode="vilamb",
+                period_steps=16, max_len=max_len)
+
+for req in range(3):  # batched request waves
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(req), (BATCH, PROMPT), 0, cfg.vocab_size, jnp.int32)}
+    t0 = time.time()
+    tokens, stats = server.generate(params, batch, GEN, scrub_every=10)
+    dt = time.time() - t0
+    print(f"request wave {req}: {tokens.shape} in {dt:.2f}s "
+          f"({BATCH*GEN/dt:.1f} tok/s), KV scrub mismatches={stats['mismatches']}")
+    print("  first seq:", tokens[0, :12].tolist())

@@ -1,0 +1,89 @@
+"""End-to-end training driver: an LM trained with asynchronous redundancy,
+periodic scrubbing, checkpointing, and preemption flush.
+
+Quick demo (CPU, ~2 min):
+    PYTHONPATH=src python examples/train_with_vilamb.py
+
+Full ~100M-param run (a few hundred steps):
+    PYTHONPATH=src python examples/train_with_vilamb.py --full --steps 300
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+
+from repro.ckpt import CheckpointManager, PreemptionHandler
+from repro.configs import get_smoke
+from repro.core import RedundancyConfig, RedundancyEngine, mttdl
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import AdamW, warmup_cosine
+from repro.train import Trainer, protected_structs
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="demo-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=32768,
+        norm="rmsnorm", activation="swiglu", param_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="~100M params")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--period", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/vilamb_demo_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_100m() if args.full else get_smoke("olmo-1b")
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+    model = build_model(cfg)
+    opt = AdamW(lr=warmup_cosine(3e-4, 20, args.steps))
+    p0 = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    o0 = jax.eval_shape(opt.init, p0)
+    engine = RedundancyEngine(
+        protected_structs(p0, o0),
+        RedundancyConfig(mode="vilamb", period_steps=args.period))
+    trainer = Trainer(model=model, opt=opt, engine=engine, mode="vilamb",
+                      period_steps=args.period, scrub_period_steps=4 * args.period)
+    handler = PreemptionHandler().install()
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+
+    shape = ShapeConfig("demo", 256 if args.full else 64, 8, "train")
+    data = SyntheticPipeline(cfg, shape, seed=0)
+
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    t0 = time.time()
+    trace = []
+
+    def on_step(st, m):
+        s = int(st.step)
+        trace.append(jax.tree.map(int, engine.dirty_stats(st.red)))
+        if s % 10 == 0:
+            tput = s * shape.seq_len * shape.global_batch / (time.time() - t0)
+            print(f"step {s:4d} loss {float(m['loss']):.4f} {tput:,.0f} tok/s")
+        if s % 50 == 0:
+            ckpt.save(s, st, blocking=False)
+        if handler.requested:
+            handler.drain(trainer, st, ckpt)
+            sys.exit(42)
+
+    state = trainer.run(state, data, args.steps, on_step=on_step)
+    state = trainer.flush(state)
+    ckpt.save(int(state.step), state, blocking=True)
+
+    avg = mttdl.average_stats(trace)
+    up = mttdl.aggregate_uplift(avg, engine.config.stripe_data_blocks + 1)
+    print(f"done. scrub alarms: {trainer.corruption_alarms}; "
+          f"measured MTTDL uplift over No-Redundancy: {up:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager
+from .failure import PreemptionHandler

@@ -1,0 +1,1 @@
+from .flatten import flatten_dict, unflatten_dict

@@ -1,0 +1,1 @@
+from .registry import ARCHS, get_arch, get_smoke, list_archs

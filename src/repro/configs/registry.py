@@ -1,0 +1,40 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = [
+    "jamba_1_5_large_398b",
+    "qwen3_moe_235b_a22b",
+    "arctic_480b",
+    "internvl2_1b",
+    "olmo_1b",
+    "nemotron_4_15b",
+    "glm4_9b",
+    "llama3_2_3b",
+    "seamless_m4t_medium",
+    "xlstm_1_3b",
+]
+
+ARCHS: Dict[str, str] = {}
+for _m in _ARCH_MODULES:
+    mod = importlib.import_module(f"repro.configs.{_m}")
+    ARCHS[mod.CONFIG.name] = _m
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def get_arch(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return mod.SMOKE

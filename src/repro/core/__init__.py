@@ -1,0 +1,13 @@
+"""Vilamb core: asynchronous system-redundancy for accelerator state."""
+from .blocks import BlockMeta, make_meta, to_lanes, from_lanes
+from .checksum import block_checksums, checksum_diff, fmix32, meta_checksum
+from .engine import ALL, RedundancyConfig, RedundancyEngine
+from .parity import parity_diff, reconstruct_block, stripe_parity, stripe_parity_masked
+from .state import LeafRedundancy, RedundancyState, empty_leaf_red
+
+__all__ = [
+    "ALL", "BlockMeta", "LeafRedundancy", "RedundancyConfig", "RedundancyEngine",
+    "RedundancyState", "block_checksums", "checksum_diff", "empty_leaf_red",
+    "fmix32", "from_lanes", "make_meta", "meta_checksum", "parity_diff",
+    "reconstruct_block", "stripe_parity", "stripe_parity_masked", "to_lanes",
+]

@@ -1,0 +1,79 @@
+"""Packed dirty-bitvector primitives (paper §3.2).
+
+The paper repurposes page-table dirty bits and manipulates them as packed
+bitvectors fetched/cleared in batches. On TPU there is no MMU in the HBM
+path, so the *writer* (the jitted step) produces dirty masks directly; this
+module provides the packed uint32 bitvector representation and the
+snapshot/clear operations of Algorithm 1.
+
+All functions are jit-safe and shape-static.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+
+
+def n_words(n_bits: int) -> int:
+    """Number of uint32 words needed to hold ``n_bits`` bits."""
+    return max(1, (n_bits + WORD_BITS - 1) // WORD_BITS)
+
+
+def zeros(n_bits: int) -> jax.Array:
+    return jnp.zeros((n_words(n_bits),), dtype=jnp.uint32)
+
+
+def ones(n_bits: int) -> jax.Array:
+    """All-valid-bits-set vector (padding bits remain zero)."""
+    return pack_mask(jnp.ones((n_bits,), dtype=bool))
+
+
+def pack_mask(mask: jax.Array) -> jax.Array:
+    """Pack a bool[n_bits] mask into uint32[n_words] (little-endian bits)."""
+    n_bits = mask.shape[0]
+    nw = n_words(n_bits)
+    pad = nw * WORD_BITS - n_bits
+    m = jnp.pad(mask.astype(jnp.uint32), (0, pad)).reshape(nw, WORD_BITS)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(m * weights[None, :], axis=1, dtype=jnp.uint32)
+
+
+def unpack(words: jax.Array, n_bits: int) -> jax.Array:
+    """Unpack uint32[n_words] into bool[n_bits]."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts[None, :]) & jnp.uint32(1)
+    return bits.reshape(-1)[:n_bits].astype(bool)
+
+
+def mark(words: jax.Array, mask: jax.Array) -> jax.Array:
+    """OR a bool[n_bits] dirty mask into the packed bitvector."""
+    return jnp.bitwise_or(words, pack_mask(mask))
+
+
+def mark_ids(words: jax.Array, n_bits: int, ids: jax.Array) -> jax.Array:
+    """OR bits for (possibly duplicated) block ids. ids < 0 are ignored.
+
+    Goes through a bool mask so duplicate ids are idempotent (scatter-set).
+    """
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, n_bits)  # out-of-bounds sentinel, dropped below
+    mask = jnp.zeros((n_bits,), bool).at[safe].set(True, mode="drop")
+    return mark(words, mask)
+
+
+def test_bit(words: jax.Array, idx) -> jax.Array:
+    """Return bool for a single bit index (jit-safe, idx may be traced)."""
+    w = words[idx // WORD_BITS]
+    return ((w >> jnp.uint32(idx % WORD_BITS)) & jnp.uint32(1)).astype(bool)
+
+
+def popcount(words: jax.Array) -> jax.Array:
+    """Total number of set bits."""
+    return jnp.sum(jax.lax.population_count(words), dtype=jnp.int32)
+
+
+def any_set(words: jax.Array) -> jax.Array:
+    return jnp.any(words != 0)

@@ -1,0 +1,173 @@
+"""Block views over state leaves (paper's "pages", §3.1).
+
+A leaf array of any shape/dtype is reinterpreted as a 2-D uint32 lane view
+``(n_blocks, lanes_per_block)`` — the unit over which checksums are computed
+and parity stripes are formed. 4 KB NVM pages become ``lanes_per_block``
+uint32 words (default 16384 lanes = 64 KiB), sized so one block is a clean
+multiple of the TPU (8, 128) vreg tile and fits VMEM comfortably.
+
+Bitcasting is layout-only; XLA fuses it into the consuming reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bits
+
+DEFAULT_LANES_PER_BLOCK = 16384  # 64 KiB blocks, = 128 * (8,128) vregs
+DEFAULT_STRIPE_DATA_BLOCKS = 4   # paper: 4 data pages + 1 parity page
+
+
+def _elems_per_word(dtype) -> int:
+    isz = jnp.dtype(dtype).itemsize
+    if isz > 4:
+        raise ValueError(f"dtypes wider than 4 bytes unsupported: {dtype}")
+    if 4 % isz:
+        raise ValueError(f"itemsize must divide 4: {dtype}")
+    return 4 // isz
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeta:
+    """Static geometry of a leaf's block view (local to a shard)."""
+    shape: Tuple[int, ...]
+    dtype: str
+    lanes_per_block: int
+    stripe_data_blocks: int
+
+    @property
+    def n_elems(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def elems_per_word(self) -> int:
+        return _elems_per_word(self.dtype)
+
+    @property
+    def n_lanes(self) -> int:
+        """Total uint32 lanes (before block padding)."""
+        return -(-self.n_elems // self.elems_per_word)
+
+    @property
+    def n_blocks(self) -> int:
+        return max(1, -(-self.n_lanes // self.lanes_per_block))
+
+    @property
+    def n_stripes(self) -> int:
+        return -(-self.n_blocks // self.stripe_data_blocks)
+
+    @property
+    def n_dirty_words(self) -> int:
+        return bits.n_words(self.n_blocks)
+
+    @property
+    def padded_lanes(self) -> int:
+        return self.n_blocks * self.lanes_per_block
+
+    @property
+    def padded_blocks(self) -> int:
+        return self.n_stripes * self.stripe_data_blocks
+
+    @property
+    def bytes_per_block(self) -> int:
+        return self.lanes_per_block * 4
+
+    @property
+    def data_bytes(self) -> int:
+        return self.n_elems * jnp.dtype(self.dtype).itemsize
+
+
+def make_meta(
+    leaf: jax.ShapeDtypeStruct | jax.Array,
+    lanes_per_block: int = DEFAULT_LANES_PER_BLOCK,
+    stripe_data_blocks: int = DEFAULT_STRIPE_DATA_BLOCKS,
+) -> BlockMeta:
+    n_lanes = -(-int(np.prod(leaf.shape) or 1) // _elems_per_word(leaf.dtype))
+    # Small leaves get a single (possibly shorter) block, padded to a multiple
+    # of 128 lanes so kernels keep (8,128)-aligned tiles.
+    lpb = min(lanes_per_block, max(128, -(-n_lanes // 128) * 128))
+    return BlockMeta(
+        shape=tuple(leaf.shape),
+        dtype=str(jnp.dtype(leaf.dtype).name),
+        lanes_per_block=lpb,
+        stripe_data_blocks=stripe_data_blocks,
+    )
+
+
+def to_lanes(x: jax.Array, meta: BlockMeta) -> jax.Array:
+    """Bitcast + pad a leaf into its (n_blocks, lanes_per_block) uint32 view."""
+    epw = meta.elems_per_word
+    flat = x.reshape(-1)
+    pad_elems = meta.n_lanes * epw - flat.shape[0]
+    if pad_elems:
+        flat = jnp.pad(flat, (0, pad_elems))
+    if epw == 1:
+        lanes = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    else:
+        lanes = jax.lax.bitcast_convert_type(flat.reshape(-1, epw), jnp.uint32)
+    lane_pad = meta.padded_lanes - lanes.shape[0]
+    if lane_pad:
+        lanes = jnp.pad(lanes, (0, lane_pad))
+    return lanes.reshape(meta.n_blocks, meta.lanes_per_block)
+
+
+def from_lanes(lanes: jax.Array, meta: BlockMeta) -> jax.Array:
+    """Inverse of :func:`to_lanes` (used by parity reconstruction)."""
+    epw = meta.elems_per_word
+    flat = lanes.reshape(-1)[: meta.n_lanes]
+    dt = jnp.dtype(meta.dtype)
+    if epw == 1:
+        out = jax.lax.bitcast_convert_type(flat, dt)
+    else:
+        out = jax.lax.bitcast_convert_type(flat, dt).reshape(-1)
+    return out[: meta.n_elems].reshape(meta.shape)
+
+
+def block_of_index(meta: BlockMeta, flat_elem_index) -> jax.Array:
+    """Block id containing a flat element index (for sparse dirty marking)."""
+    lane = flat_elem_index // meta.elems_per_word
+    return lane // meta.lanes_per_block
+
+
+def blocks_of_rows(meta: BlockMeta, row_ids: jax.Array) -> jax.Array:
+    """Block-id ranges covered by whole leading-axis rows (embedding rows,
+    MoE expert slabs, KV pages). Returns the block id of each row's first
+    element; callers should also mark the block of the row's last element
+    when rows straddle blocks (see :func:`row_block_mask`)."""
+    if not meta.shape:
+        return jnp.zeros_like(row_ids)
+    row_elems = int(np.prod(meta.shape[1:])) if len(meta.shape) > 1 else 1
+    first = row_ids * row_elems
+    return block_of_index(meta, first)
+
+
+def row_block_mask(meta: BlockMeta, row_ids: jax.Array, row_dims: int = 1) -> jax.Array:
+    """bool[n_blocks] mask of all blocks touched by the given rows.
+
+    Rows index the leaf's first ``row_dims`` axes flattened (ids < 0
+    ignored); handles rows straddling multiple blocks. This is the
+    domain-space -> block-space translation of the paper's dirty bits.
+    """
+    if not meta.shape:
+        return jnp.ones((meta.n_blocks,), bool)
+    row_elems = int(np.prod(meta.shape[row_dims:])) if len(meta.shape) > row_dims else 1
+    row_lanes = -(-row_elems // meta.elems_per_word) if meta.elems_per_word else row_elems
+    blocks_per_row = max(1, -(-row_elems // (meta.lanes_per_block * meta.elems_per_word)) + 1)
+    valid = row_ids >= 0
+    safe_rows = jnp.where(valid, row_ids, 0)
+    first_lane = safe_rows.astype(jnp.int64 if meta.n_lanes > 2**31 else jnp.int32) * row_lanes
+    first_block = first_lane // meta.lanes_per_block
+    offs = jnp.arange(blocks_per_row)
+    ids = first_block[:, None] + offs[None, :]
+    last_lane = first_lane + row_lanes - 1
+    last_block = last_lane // meta.lanes_per_block
+    in_range = ids <= last_block[:, None]
+    ids = jnp.where(in_range & valid[:, None], ids, meta.n_blocks)
+    mask = jnp.zeros((meta.n_blocks,), bool).at[ids.reshape(-1)].set(True, mode="drop")
+    return mask

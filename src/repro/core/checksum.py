@@ -1,0 +1,83 @@
+"""Per-block checksums — the TPU adaptation of the paper's CRC-32C.
+
+``crc32q`` is a serial bit-level x86 instruction; CRC's linear-feedback
+structure does not vectorize on the TPU VPU. We use a position-salted
+Murmur3-finalizer XOR-fold instead:
+
+    cksum(block b) = XOR_i fmix32(w_i XOR salt(b, i))
+    salt(b, i)     = (b * GOLDEN) XOR (i * SALT2)
+
+Properties (documented in DESIGN.md §2.1):
+  * embarrassingly parallel + XOR-reassociable → maps onto 8x128 VPU lanes;
+  * any single-lane change flips the checksum w.p. 1 - 2^-32;
+  * position salting defeats lane-swap / block-swap aliasing (the paper's
+    misdirected-write bugs);
+  * incrementally updatable from a value diff — the same property Pangolin
+    exploits in CRC for its micro-buffer diff updates:
+        cksum' = cksum ^ fmix32(old^salt) ^ fmix32(new^salt).
+
+All arithmetic is uint32 with wrap-around (XLA semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN = np.uint32(0x9E3779B9)
+SALT2 = np.uint32(0x85EBCA77)
+C1 = np.uint32(0x85EBCA6B)
+C2 = np.uint32(0xC2B2AE35)
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """Murmur3 32-bit finalizer (avalanche mix)."""
+    x = x ^ (x >> 16)
+    x = x * C1
+    x = x ^ (x >> 13)
+    x = x * C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def lane_salt(block_ids: jax.Array, lane_ids: jax.Array) -> jax.Array:
+    """salt(b, i); broadcasts (B,1)x(1,L) -> (B,L). uint32 wrap is fine."""
+    b = block_ids.astype(jnp.uint32) * GOLDEN
+    l = lane_ids.astype(jnp.uint32) * SALT2
+    return b ^ l
+
+
+def block_checksums(lanes: jax.Array, block_offset=0) -> jax.Array:
+    """Checksum each row of a (n_blocks, lanes) uint32 view.
+
+    ``block_offset`` shifts the block-id salt (used by sharded callers so
+    every local block keeps a distinct salt within the shard).
+    """
+    nb, L = lanes.shape
+    bids = jnp.arange(nb, dtype=jnp.uint32)[:, None] + jnp.uint32(block_offset)
+    lids = jnp.arange(L, dtype=jnp.uint32)[None, :]
+    h = fmix32(lanes ^ lane_salt(bids, lids))
+    return jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def checksum_diff(
+    old_lanes: jax.Array, new_lanes: jax.Array, block_offset=0
+) -> jax.Array:
+    """Per-block incremental checksum delta: cksum' = cksum ^ delta.
+
+    This is the Pangolin-mode (sync, diff-based) update path.
+    """
+    nb, L = old_lanes.shape
+    bids = jnp.arange(nb, dtype=jnp.uint32)[:, None] + jnp.uint32(block_offset)
+    lids = jnp.arange(L, dtype=jnp.uint32)[None, :]
+    salt = lane_salt(bids, lids)
+    h = fmix32(old_lanes ^ salt) ^ fmix32(new_lanes ^ salt)
+    return jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def meta_checksum(checksums: jax.Array) -> jax.Array:
+    """Checksum-of-checksums (paper Algorithm 1, line 22)."""
+    flat = checksums.reshape(-1)
+    ids = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    h = fmix32(flat ^ (ids * GOLDEN))
+    return jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (0,))

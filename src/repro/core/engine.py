@@ -1,0 +1,412 @@
+"""RedundancyEngine — the paper's contribution as a composable JAX module.
+
+Modes (Table 1 of the paper):
+  * ``none``   — No-Redundancy baseline.
+  * ``sync``   — Pangolin-analogue: checksum+parity updated inside the step,
+                 incrementally from the old/new value diff.
+  * ``vilamb`` — the paper: dirty bits accumulate during steps; a periodic
+                 ``redundancy_step`` (Algorithm 1) amortizes the update.
+
+The engine is machine-local by construction (paper §3.3): when given a mesh
+and per-leaf PartitionSpecs, every redundancy computation runs under
+``shard_map`` on shard-local blocks with **zero collectives**; checksum,
+parity, and bitvector arrays are sharded alongside their leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import bits, blocks, checksum, parity
+from .blocks import BlockMeta, DEFAULT_LANES_PER_BLOCK, DEFAULT_STRIPE_DATA_BLOCKS
+from .state import LeafRedundancy, RedundancyState, empty_leaf_red, leaf_red_struct
+
+try:  # JAX >= 0.4.35 stable API
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+# Dirty-event sentinel: "every block of this leaf was (potentially) written".
+ALL = "__all__"
+DirtyEvent = Union[str, jax.Array]  # ALL or bool row-mask over leading axis
+
+
+@dataclasses.dataclass(frozen=True)
+class RedundancyConfig:
+    mode: str = "vilamb"                 # none | sync | vilamb
+    period_steps: int = 8                # paper's update period T (in steps)
+    scrub_period_steps: int = 64
+    lanes_per_block: int = DEFAULT_LANES_PER_BLOCK
+    stripe_data_blocks: int = DEFAULT_STRIPE_DATA_BLOCKS
+    use_kernels: bool = False            # Pallas path (interpret on CPU)
+    kernel_interpret: bool = True        # no real TPU in this container
+
+    def __post_init__(self):
+        assert self.mode in ("none", "sync", "vilamb"), self.mode
+
+
+def _local_shape(shape, spec: Optional[P], mesh: Optional[Mesh]):
+    if mesh is None or spec is None:
+        return tuple(shape)
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec[i] if i < len(spec) else None
+        if ax is None:
+            out.append(dim)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        k = int(np.prod([mesh.shape[a] for a in axes]))
+        assert dim % k == 0, f"dim {dim} not divisible by mesh axes {axes} ({k})"
+        out.append(dim // k)
+    return tuple(out)
+
+
+def _leaf_axes(spec: Optional[P]) -> Tuple[str, ...]:
+    """All mesh axes a leaf is sharded over (flattened, order of appearance)."""
+    if spec is None:
+        return ()
+    out = []
+    for ax in spec:
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            out.append(a)
+    return tuple(out)
+
+
+class RedundancyEngine:
+    """Builds jitted redundancy ops for a named dict of state leaves."""
+
+    def __init__(
+        self,
+        leaf_structs: Mapping[str, Any],
+        config: RedundancyConfig = RedundancyConfig(),
+        mesh: Optional[Mesh] = None,
+        specs: Optional[Mapping[str, P]] = None,
+    ):
+        self.config = config
+        self.mesh = mesh
+        self.specs = dict(specs or {})
+        self.metas: Dict[str, BlockMeta] = {}
+        for name, leaf in leaf_structs.items():
+            lshape = _local_shape(leaf.shape, self.specs.get(name), mesh)
+            self.metas[name] = blocks.make_meta(
+                jax.ShapeDtypeStruct(lshape, leaf.dtype),
+                lanes_per_block=config.lanes_per_block,
+                stripe_data_blocks=config.stripe_data_blocks,
+            )
+        self._kernel_ops = None
+        if config.use_kernels:
+            from repro.kernels.redundancy import ops as kops
+            self._kernel_ops = kops
+
+    # ------------------------------------------------------------------ utils
+    def _shard_factor(self, name: str) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in _leaf_axes(self.specs.get(name))]) or 1)
+
+    def red_spec(self, name: str) -> LeafRedundancy:
+        """PartitionSpecs for a leaf's redundancy arrays (dim0-sharded)."""
+        axes = _leaf_axes(self.specs.get(name))
+        s = P(axes if axes else None)
+        return LeafRedundancy(checksums=s, parity=s, dirty=s, shadow=s, meta_ck=P())
+
+    def red_structs(self, global_: bool = True) -> RedundancyState:
+        """ShapeDtypeStructs of the redundancy state (global shapes)."""
+        out = {}
+        for name, meta in self.metas.items():
+            st = leaf_red_struct(meta)
+            if global_:
+                k = self._shard_factor(name)
+                st = LeafRedundancy(
+                    checksums=jax.ShapeDtypeStruct((meta.n_blocks * k,), jnp.uint32),
+                    parity=jax.ShapeDtypeStruct(
+                        (meta.n_stripes * k, meta.lanes_per_block), jnp.uint32),
+                    dirty=jax.ShapeDtypeStruct((meta.n_dirty_words * k,), jnp.uint32),
+                    shadow=jax.ShapeDtypeStruct((meta.n_dirty_words * k,), jnp.uint32),
+                    meta_ck=jax.ShapeDtypeStruct((), jnp.uint32),
+                )
+            out[name] = st
+        return out
+
+    def red_shardings(self) -> Dict[str, LeafRedundancy]:
+        assert self.mesh is not None
+        return {
+            name: jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                               self.red_spec(name),
+                               is_leaf=lambda x: isinstance(x, P))
+            for name in self.metas
+        }
+
+    def _wrap(self, fn: Callable, leaf_in_specs, red_in: bool, extra_specs=()):
+        """shard_map a per-shard-local function when a mesh is present."""
+        if self.mesh is None:
+            return fn
+        in_specs = list(leaf_in_specs)
+        if red_in:
+            in_specs.append({n: self.red_spec(n) for n in self.metas})
+        in_specs.extend(extra_specs)
+        out_specs = {n: self.red_spec(n) for n in self.metas}
+        return shard_map(
+            fn, mesh=self.mesh, in_specs=tuple(in_specs),
+            out_specs=out_specs, check_vma=False,
+        )
+
+    def _leaf_specs_dict(self) -> Dict[str, P]:
+        return {n: self.specs.get(n, P()) for n in self.metas}
+
+    # ------------------------------------------------------------- primitives
+    def _cks_par(self, meta: BlockMeta, lanes, old: LeafRedundancy, bdirty, sdirty):
+        """Masked checksum+parity recompute (ref or Pallas fused kernel)."""
+        if self._kernel_ops is not None:
+            return self._kernel_ops.fused_update(
+                lanes, old.checksums, old.parity, bdirty, sdirty,
+                meta.stripe_data_blocks, interpret=self.config.kernel_interpret)
+        cks = jnp.where(bdirty, checksum.block_checksums(lanes), old.checksums)
+        par = parity.stripe_parity_masked(lanes, old.parity, sdirty, meta.stripe_data_blocks)
+        return cks, par
+
+    def _stripe_dirty(self, meta: BlockMeta, bdirty):
+        padded = jnp.pad(bdirty, (0, meta.padded_blocks - meta.n_blocks))
+        return jnp.any(padded.reshape(meta.n_stripes, meta.stripe_data_blocks), axis=1)
+
+    # -------------------------------------------------------------- init
+    def init(self, leaves: Mapping[str, jax.Array]) -> RedundancyState:
+        """Full redundancy computation (file-creation time in the paper)."""
+        def local(ls):
+            out = {}
+            for name, meta in self.metas.items():
+                lanes = blocks.to_lanes(ls[name], meta)
+                cks = checksum.block_checksums(lanes)
+                par = parity.stripe_parity(lanes, meta.stripe_data_blocks)
+                out[name] = LeafRedundancy(
+                    checksums=cks, parity=par,
+                    dirty=jnp.zeros((meta.n_dirty_words,), jnp.uint32),
+                    shadow=jnp.zeros((meta.n_dirty_words,), jnp.uint32),
+                    meta_ck=checksum.meta_checksum(cks),
+                )
+            return out
+        fn = self._wrap(local, [self._leaf_specs_dict()], red_in=False)
+        return jax.jit(fn)(dict(leaves))
+
+    # -------------------------------------------------------------- marking
+    def mark_dirty(
+        self, red: RedundancyState, events: Mapping[str, DirtyEvent]
+    ) -> RedundancyState:
+        """OR dirty events into the bitvectors (run inside the train step).
+
+        Events are domain-space: ``ALL`` for dense leaves, or a bool row-mask
+        over the leaf's leading axis (embedding rows / experts / KV pages) —
+        converted to shard-local block masks under shard_map.
+        """
+        events = dict(events)
+
+        def local(red_l, evs):
+            out = dict(red_l)
+            for name, ev in evs.items():
+                meta = self.metas[name]
+                r = red_l[name]
+                if isinstance(ev, str) and ev == ALL:
+                    mask = jnp.ones((meta.n_blocks,), bool)
+                elif (ev.ndim == 1 and len(meta.shape) >= 1
+                      and ev.shape[0] == meta.shape[0]
+                      and meta.n_blocks == meta.shape[0]):
+                    # Fast path: rows map 1:1 to blocks (4 KiB-page heaps,
+                    # KV pages) — the event mask IS the block mask.
+                    mask = ev
+                else:
+                    flat = ev.reshape(-1)
+                    rows = jnp.nonzero(flat, size=flat.shape[0], fill_value=-1)[0]
+                    mask = blocks.row_block_mask(meta, rows, row_dims=ev.ndim)
+                out[name] = dataclasses.replace(r, dirty=bits.mark(r.dirty, mask))
+            return out
+
+        if self.mesh is None:
+            return local(red, events)
+        ev_specs = {}
+        for name, ev in events.items():
+            if isinstance(ev, str):
+                ev_specs[name] = None
+            else:
+                spec = self.specs.get(name, P())
+                lead = [spec[i] if i < len(spec) else None for i in range(ev.ndim)]
+                ev_specs[name] = P(*lead)
+        # split static ALL markers from array events for shard_map
+        arr_events = {n: e for n, e in events.items() if not isinstance(e, str)}
+        all_names = [n for n, e in events.items() if isinstance(e, str)]
+
+        def local2(red_l, arr_evs):
+            evs = dict(arr_evs)
+            for n in all_names:
+                evs[n] = ALL
+            return local(red_l, evs)
+
+        fn = shard_map(
+            local2, mesh=self.mesh,
+            in_specs=({n: self.red_spec(n) for n in self.metas},
+                      {n: ev_specs[n] for n in arr_events}),
+            out_specs={n: self.red_spec(n) for n in self.metas},
+            check_vma=False,
+        )
+        return fn(red, arr_events)
+
+    # -------------------------------------------------- Algorithm 1 (vilamb)
+    def redundancy_step(
+        self, leaves: Mapping[str, jax.Array], red: RedundancyState
+    ) -> RedundancyState:
+        """One invocation of the paper's background update thread.
+
+        Per leaf: snapshot dirty→shadow, clear dirty, recompute checksums of
+        dirty blocks and parity of stripes containing a dirty block, clear
+        shadow, refresh the meta-checksum. Fences become data dependencies.
+        """
+        def local(ls, red_l):
+            out = {}
+            for name, meta in self.metas.items():
+                r = red_l[name]
+                # Line 2-4: snapshot (include leftover shadow from a crash).
+                snapshot = jnp.bitwise_or(r.dirty, r.shadow)
+                shadow = snapshot                      # persisted shadow copy
+                dirty = jnp.zeros_like(r.dirty)        # Line 6: clear
+                bdirty = bits.unpack(shadow, meta.n_blocks)
+                sdirty = self._stripe_dirty(meta, bdirty)
+                lanes = blocks.to_lanes(ls[name], meta)
+                # Lines 7-18: masked checksum + parity recompute.
+                cks, par = self._cks_par(meta, lanes, r, bdirty, sdirty)
+                # Lines 19-20: in the paper a fence orders "redundancy written"
+                # before "shadow cleared". Inside one jitted step the returned
+                # state is atomic; crash-atomicity across steps is provided by
+                # the checkpoint layer persisting (data, cks, par, shadow)
+                # together. Clearing shadow here is therefore safe.
+                shadow = jnp.zeros_like(snapshot)
+                out[name] = LeafRedundancy(
+                    checksums=cks, parity=par, dirty=dirty, shadow=shadow,
+                    meta_ck=checksum.meta_checksum(cks),  # Line 22
+                )
+            return out
+
+        fn = self._wrap(local, [self._leaf_specs_dict()], red_in=True)
+        return fn(dict(leaves), red)
+
+    flush = redundancy_step  # battery/preemption flush = forced update pass
+
+    # ----------------------------------------------------- sync (Pangolin)
+    def sync_update(
+        self,
+        old_leaves: Mapping[str, jax.Array],
+        new_leaves: Mapping[str, jax.Array],
+        red: RedundancyState,
+    ) -> RedundancyState:
+        """Pangolin-analogue inline update from the old/new diff.
+
+        Valid only when redundancy was up-to-date before the step (sync-mode
+        invariant). Reads 2x the changed data, nothing else — the paper's
+        micro-buffer diff advantage (§4.2).
+        """
+        def local(ols, nls, red_l):
+            out = {}
+            for name, meta in self.metas.items():
+                r = red_l[name]
+                o = blocks.to_lanes(ols[name], meta)
+                n = blocks.to_lanes(nls[name], meta)
+                cks = r.checksums ^ checksum.checksum_diff(o, n)
+                par = r.parity ^ parity.parity_diff(o, n, meta.stripe_data_blocks)
+                out[name] = LeafRedundancy(
+                    checksums=cks, parity=par, dirty=r.dirty, shadow=r.shadow,
+                    meta_ck=checksum.meta_checksum(cks),
+                )
+            return out
+
+        fn = self._wrap(
+            local, [self._leaf_specs_dict(), self._leaf_specs_dict()], red_in=True)
+        return fn(dict(old_leaves), dict(new_leaves), red)
+
+    # ------------------------------------------------------------- scrubbing
+    def scrub(
+        self, leaves: Mapping[str, jax.Array], red: RedundancyState
+    ) -> Dict[str, jax.Array]:
+        """Verification pass over clean blocks (paper §3.4).
+
+        Returns per-leaf bool[n_blocks] mismatch masks. The double-check
+        protocol (re-verify cleanliness after a mismatch) is enforced here by
+        evaluating cleanliness and checksums on the same immutable snapshot —
+        the host-level loop re-runs scrub after quiescing if any mismatch
+        fires, mirroring the paper's second check.
+        """
+        def local(ls, red_l):
+            out = {}
+            for name, meta in self.metas.items():
+                r = red_l[name]
+                clean = ~bits.unpack(jnp.bitwise_or(r.dirty, r.shadow), meta.n_blocks)
+                lanes = blocks.to_lanes(ls[name], meta)
+                fresh = checksum.block_checksums(lanes)
+                out[name] = clean & (fresh != r.checksums)
+            return out
+
+        if self.mesh is None:
+            return local(dict(leaves), red)
+        out_specs = {
+            n: P(_leaf_axes(self.specs.get(n)) or None) for n in self.metas
+        }
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(self._leaf_specs_dict(), {n: self.red_spec(n) for n in self.metas}),
+            out_specs=out_specs, check_vma=False,
+        )
+        return fn(dict(leaves), red)
+
+    def verify_meta(self, red: RedundancyState) -> Dict[str, jax.Array]:
+        """Check the checksum-of-checksums (detects corrupted checksum pages)."""
+        return {
+            name: checksum.meta_checksum(r.checksums) == r.meta_ck
+            for name, r in red.items()
+        }
+
+    # -------------------------------------------------------------- recovery
+    def recover_block(
+        self, leaf: jax.Array, r: LeafRedundancy, name: str, block_id
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Reconstruct one corrupted block from its stripe (shard-local arrays).
+
+        Returns (repaired_leaf, ok). ``ok`` is False when the stripe is
+        vulnerable (any *other* member dirty/shadow-set) — the paper's §3.3
+        recoverability rule. The paper left recovery unimplemented; we do not.
+        """
+        meta = self.metas[name]
+        sid = block_id // meta.stripe_data_blocks
+        member_ids = sid * meta.stripe_data_blocks + jnp.arange(meta.stripe_data_blocks)
+        in_range = member_ids < meta.n_blocks
+        dmask = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow), meta.n_blocks)
+        member_dirty = jnp.where(
+            in_range, dmask[jnp.clip(member_ids, 0, meta.n_blocks - 1)], False)
+        others_clean = jnp.all(~member_dirty | (member_ids == block_id))
+        lanes = blocks.to_lanes(leaf, meta)
+        rebuilt = parity.reconstruct_block(
+            lanes, r.parity[sid], meta.stripe_data_blocks, block_id, sid)
+        new_lanes = lanes.at[block_id].set(
+            jnp.where(others_clean, rebuilt, lanes[block_id]))
+        return blocks.from_lanes(new_lanes, meta), others_clean
+
+    # ------------------------------------------------------------ accounting
+    def dirty_stats(self, red: RedundancyState) -> Dict[str, Dict[str, jax.Array]]:
+        """Dirty/vulnerable-stripe counts (feeds §4.7 battery + §4.8 MTTDL)."""
+        out = {}
+        for name, meta in self.metas.items():
+            r = red[name]
+            live = jnp.bitwise_or(r.dirty, r.shadow)
+            bdirty = bits.unpack(live, meta.n_blocks)
+            sdirty = self._stripe_dirty(meta, bdirty)
+            out[name] = {
+                "dirty_blocks": jnp.sum(bdirty, dtype=jnp.int32),
+                "vulnerable_stripes": jnp.sum(sdirty, dtype=jnp.int32),
+                "total_blocks": meta.n_blocks,
+                "total_stripes": meta.n_stripes,
+            }
+        return out

@@ -1,0 +1,56 @@
+"""Reliability model — paper §4.8.
+
+MTTDL_NoRed  = MTTF_page / P                (P = total pages/blocks)
+MTTDL_Vilamb = MTTF_page / (V * N)          (V = vulnerable stripes,
+                                             N = blocks per stripe)
+uplift       = P / (V * N)
+
+V is measured empirically from dirty traces of real workloads (the engine's
+``dirty_stats``), exactly as the paper does.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping
+
+
+def mttdl_no_red(mttf_block: float, total_blocks: int) -> float:
+    return mttf_block / max(total_blocks, 1)
+
+
+def mttdl_vilamb(mttf_block: float, vulnerable_stripes: float, stripe_blocks: int) -> float:
+    denom = max(vulnerable_stripes * stripe_blocks, 1e-12)
+    return mttf_block / denom
+
+
+def mttdl_uplift(total_blocks: int, vulnerable_stripes: float, stripe_blocks: int) -> float:
+    """P / (V*N); infinite (capped) when no stripe is ever vulnerable."""
+    denom = vulnerable_stripes * stripe_blocks
+    if denom <= 0:
+        return float("inf")
+    return total_blocks / denom
+
+
+def aggregate_uplift(stats: Mapping[str, Mapping[str, float]], stripe_blocks: int) -> float:
+    """Uplift across all leaves of a state dict (time-averaged V per leaf)."""
+    total = sum(int(s["total_blocks"]) for s in stats.values())
+    vuln = sum(float(s["vulnerable_stripes"]) for s in stats.values())
+    return mttdl_uplift(total, vuln, stripe_blocks)
+
+
+def average_stats(trace: Iterable[Mapping[str, Mapping[str, float]]]) -> Dict[str, Dict[str, float]]:
+    """Average vulnerable-stripe counts over a trace of dirty_stats snapshots."""
+    acc: Dict[str, Dict[str, float]] = {}
+    n = 0
+    for snap in trace:
+        n += 1
+        for name, s in snap.items():
+            a = acc.setdefault(name, {"vulnerable_stripes": 0.0,
+                                      "dirty_blocks": 0.0,
+                                      "total_blocks": int(s["total_blocks"]),
+                                      "total_stripes": int(s["total_stripes"])})
+            a["vulnerable_stripes"] += float(s["vulnerable_stripes"])
+            a["dirty_blocks"] += float(s["dirty_blocks"])
+    for a in acc.values():
+        a["vulnerable_stripes"] /= max(n, 1)
+        a["dirty_blocks"] /= max(n, 1)
+    return acc

@@ -1,0 +1,79 @@
+"""Cross-block XOR parity stripes (paper's cross-page parity).
+
+Stripes are ``P`` consecutive data blocks plus one parity block (paper
+default: 4+1, statically assigned at init). The paper computes parity with
+AVX over 256-byte words; here it is an XOR reduction over uint32 lanes on
+the VPU. Parity lives in a separate array (``uint32[n_stripes, lanes]``),
+stored apart from the data like the paper's parity pages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _striped(lanes: jax.Array, stripe_width: int) -> jax.Array:
+    """(n_blocks, L) -> (n_stripes, P, L), zero-padding trailing blocks."""
+    nb, L = lanes.shape
+    ns = -(-nb // stripe_width)
+    pad = ns * stripe_width - nb
+    if pad:
+        lanes = jnp.pad(lanes, ((0, pad), (0, 0)))
+    return lanes.reshape(ns, stripe_width, L)
+
+
+def stripe_parity(lanes: jax.Array, stripe_width: int) -> jax.Array:
+    """XOR parity for every stripe: uint32[n_stripes, L]."""
+    s = _striped(lanes, stripe_width)
+    return jax.lax.reduce(s, jnp.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+def stripe_parity_masked(
+    lanes: jax.Array,
+    old_parity: jax.Array,
+    stripe_dirty: jax.Array,
+    stripe_width: int,
+) -> jax.Array:
+    """Recompute parity only for dirty stripes; clean stripes keep old parity.
+
+    This is the reference (pure-jnp) semantics; kernels/redundancy implements
+    the work-queue version that skips the data *read* for clean stripes too.
+    """
+    fresh = stripe_parity(lanes, stripe_width)
+    return jnp.where(stripe_dirty[:, None], fresh, old_parity)
+
+
+def parity_diff(old_lanes: jax.Array, new_lanes: jax.Array, stripe_width: int) -> jax.Array:
+    """Pangolin-mode incremental parity delta: parity' = parity ^ delta.
+
+    XOR of old and new bits, folded per stripe — reads only the changed
+    blocks, not the rest of the stripe (the paper's diff advantage, §4.2).
+    """
+    delta = old_lanes ^ new_lanes
+    return stripe_parity(delta, stripe_width)
+
+
+def reconstruct_block(
+    lanes: jax.Array, parity_row: jax.Array, stripe_width: int, block_id, stripe_id
+) -> jax.Array:
+    """Rebuild one block from its stripe: XOR of parity and the other members.
+
+    Caller must ensure every *other* member is clean and parity is current
+    (the paper's vulnerable-stripe rule, §3.3).
+    """
+    nb, L = lanes.shape
+    start = stripe_id * stripe_width
+    member_ids = start + jnp.arange(stripe_width)
+    # Out-of-range members (last partial stripe) contribute zeros.
+    members = jnp.where(
+        (member_ids < nb)[:, None],
+        lanes[jnp.clip(member_ids, 0, nb - 1)],
+        jnp.uint32(0),
+    )
+    keep = (member_ids != block_id)[:, None]
+    acc = jax.lax.reduce(
+        jnp.where(keep, members, jnp.uint32(0)),
+        jnp.uint32(0), jax.lax.bitwise_xor, (0,),
+    )
+    return acc ^ parity_row

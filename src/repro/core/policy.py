@@ -1,0 +1,71 @@
+"""Update scheduling + flush budget — paper §3.3 battery / §4.7 cost model.
+
+On TPU fleets the "battery" is the preemption grace window: when a SIGTERM
+arrives, the launcher must finish pending redundancy updates (flush) and
+checkpoint within the grace budget. This module sizes that flush from dirty
+state and prices the paper's battery equivalents for comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping
+
+# Paper §4.7 constants.
+ULTRACAP_DOLLARS_PER_KJ = 2.85
+LIION_DOLLARS_PER_KJ = 0.02
+SERVER_WATTS = 500.0
+
+# TPU v5e target hardware (per chip).
+HBM_BYTES_PER_SEC = 819e9
+PEAK_BF16_FLOPS = 197e12
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushEstimate:
+    dirty_bytes: int          # data read to recompute checksums
+    stripe_bytes: int         # stripe reads for parity
+    write_bytes: int          # checksum + parity writes
+    seconds: float            # at HBM bandwidth (redundancy is memory-bound)
+    energy_kj: float
+    ultracap_dollars: float
+    liion_dollars: float
+
+
+def should_update(step: int, period_steps: int) -> bool:
+    return period_steps > 0 and step % period_steps == 0 and step > 0
+
+
+def should_scrub(step: int, scrub_period_steps: int) -> bool:
+    return scrub_period_steps > 0 and step % scrub_period_steps == 0 and step > 0
+
+
+def estimate_flush(
+    dirty_stats: Mapping[str, Mapping[str, int]],
+    bytes_per_block: Mapping[str, int],
+    stripe_blocks: int,
+) -> FlushEstimate:
+    """Size the preemption flush from live dirty state.
+
+    Checksum pass reads every dirty block once; parity pass reads every
+    vulnerable stripe once (fused kernel reads each stripe exactly once and
+    produces both — see kernels/redundancy). Memory-bound ⇒ seconds =
+    bytes / HBM bandwidth.
+    """
+    dirty_b = 0
+    stripe_b = 0
+    write_b = 0
+    for name, s in dirty_stats.items():
+        bpb = bytes_per_block[name]
+        dirty_b += int(s["dirty_blocks"]) * bpb
+        stripe_b += int(s["vulnerable_stripes"]) * stripe_blocks * bpb
+        write_b += int(s["vulnerable_stripes"]) * bpb + int(s["dirty_blocks"]) * 4
+    # Fused single pass: stripe read covers the dirty-block read.
+    read_b = max(dirty_b, stripe_b)
+    seconds = (read_b + write_b) / HBM_BYTES_PER_SEC
+    energy_kj = seconds * SERVER_WATTS / 1e3
+    return FlushEstimate(
+        dirty_bytes=dirty_b, stripe_bytes=stripe_b, write_bytes=write_b,
+        seconds=seconds, energy_kj=energy_kj,
+        ultracap_dollars=energy_kj * ULTRACAP_DOLLARS_PER_KJ,
+        liion_dollars=energy_kj * LIION_DOLLARS_PER_KJ,
+    )

@@ -1,0 +1,53 @@
+"""Redundancy state containers (pytrees)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import bits
+from .blocks import BlockMeta
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LeafRedundancy:
+    """Per-leaf system-redundancy state (all shard-local geometry).
+
+    checksums : uint32[n_blocks]      per-block fmix32 XOR-fold (paper: CRC32C)
+    parity    : uint32[n_stripes, L]  stripe XOR parity (paper: parity pages)
+    dirty     : uint32[n_words]       packed dirty bitvector (paper: PTE bits)
+    shadow    : uint32[n_words]       persistent shadow copy (paper §3.2)
+    meta_ck   : uint32[]              checksum-of-checksums (Alg. 1 line 22)
+    """
+    checksums: jax.Array
+    parity: jax.Array
+    dirty: jax.Array
+    shadow: jax.Array
+    meta_ck: jax.Array
+
+
+def empty_leaf_red(meta: BlockMeta) -> LeafRedundancy:
+    return LeafRedundancy(
+        checksums=jnp.zeros((meta.n_blocks,), jnp.uint32),
+        parity=jnp.zeros((meta.n_stripes, meta.lanes_per_block), jnp.uint32),
+        dirty=jnp.zeros((meta.n_dirty_words,), jnp.uint32),
+        shadow=jnp.zeros((meta.n_dirty_words,), jnp.uint32),
+        meta_ck=jnp.zeros((), jnp.uint32),
+    )
+
+
+def leaf_red_struct(meta: BlockMeta) -> LeafRedundancy:
+    """ShapeDtypeStruct skeleton (for dry-run lowering)."""
+    return LeafRedundancy(
+        checksums=jax.ShapeDtypeStruct((meta.n_blocks,), jnp.uint32),
+        parity=jax.ShapeDtypeStruct((meta.n_stripes, meta.lanes_per_block), jnp.uint32),
+        dirty=jax.ShapeDtypeStruct((meta.n_dirty_words,), jnp.uint32),
+        shadow=jax.ShapeDtypeStruct((meta.n_dirty_words,), jnp.uint32),
+        meta_ck=jax.ShapeDtypeStruct((), jnp.uint32),
+    )
+
+
+RedundancyState = Dict[str, LeafRedundancy]

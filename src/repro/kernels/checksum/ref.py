@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the block-checksum kernel (same math as core)."""
+from repro.core.checksum import block_checksums  # noqa: F401  (the oracle)

@@ -1,0 +1,51 @@
+"""Shared kernel helpers: uint32 mixing on (8,128)-tiled vregs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN = np.uint32(0x9E3779B9)
+SALT2 = np.uint32(0x85EBCA77)
+C1 = np.uint32(0x85EBCA6B)
+C2 = np.uint32(0xC2B2AE35)
+
+SUBLANES = 8
+LANES = 128
+
+
+def fmix32(x):
+    x = x ^ (x >> 16)
+    x = x * C1
+    x = x ^ (x >> 13)
+    x = x * C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def xor_reduce(x, axes):
+    return jax.lax.reduce(x, jnp.uint32(0), jax.lax.bitwise_xor, axes)
+
+
+def lane_tile(n_lanes: int, max_tile: int = 4096) -> int:
+    """Largest multiple-of-128 tile dividing n_lanes, capped at max_tile."""
+    assert n_lanes % LANES == 0, n_lanes
+    if n_lanes <= max_tile:
+        return n_lanes
+    t = max_tile
+    while t >= LANES:
+        if n_lanes % t == 0:
+            return t
+        t -= LANES
+    return LANES
+
+
+def lane_index_2d(tile_lanes: int, lane_offset):
+    """uint32 lane indices for a (tile_lanes//128, 128) vreg view.
+
+    TPU requires >=2-D iota; build global lane ids from two broadcasted iotas.
+    """
+    rows = tile_lanes // LANES
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, LANES), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, LANES), 1)
+    return r * jnp.uint32(LANES) + c + jnp.uint32(lane_offset)

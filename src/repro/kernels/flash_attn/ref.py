@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: exact softmax attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, causal: bool = True, scale: float | None = None):
+    """q,k,v: (BH, S, hd) -> (BH, S, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)

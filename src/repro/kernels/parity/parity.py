@@ -1,0 +1,36 @@
+"""Pallas TPU kernel: stripe XOR parity (paper's cross-page parity).
+
+AVX 256-byte-word XOR in the paper becomes a uint32 XOR reduction over the
+stripe axis on the VPU. Grid = (n_stripes, lane_tiles); each step loads a
+(1, P, TILE) slab — the P stripe members' matching lane range — and writes
+their XOR.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import lane_tile, xor_reduce
+
+
+def _kernel(x_ref, out_ref):
+    out_ref[...] = xor_reduce(x_ref[...], (1,))
+
+
+def stripe_parity_striped(
+    striped: jax.Array, *, max_tile: int = 4096, interpret: bool = False
+) -> jax.Array:
+    """Parity of a pre-striped uint32[n_stripes, P, L] view -> [n_stripes, L]."""
+    ns, P, L = striped.shape
+    tile = lane_tile(L, max_tile)
+    return pl.pallas_call(
+        _kernel,
+        grid=(ns, L // tile),
+        in_specs=[pl.BlockSpec((1, P, tile), lambda s, j: (s, 0, j))],
+        out_specs=pl.BlockSpec((1, tile), lambda s, j: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((ns, L), jnp.uint32),
+        interpret=interpret,
+    )(striped)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the stripe-parity kernel."""
+from repro.core.parity import stripe_parity, stripe_parity_masked  # noqa: F401

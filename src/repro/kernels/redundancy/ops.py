@@ -1,0 +1,54 @@
+"""Jitted wrapper: dirty-mask → work queue → fused kernel → merged state."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import xor_reduce
+from . import ref
+from .redundancy import fused_update_striped
+
+
+def _striped(lanes: jax.Array, stripe_width: int) -> jax.Array:
+    nb, L = lanes.shape
+    ns = -(-nb // stripe_width)
+    pad = ns * stripe_width - nb
+    if pad:
+        lanes = jnp.pad(lanes, ((0, pad), (0, 0)))
+    return lanes.reshape(ns, stripe_width, L)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stripe_width", "use_pallas", "interpret"))
+def fused_update(
+    lanes2d: jax.Array,
+    old_checksums: jax.Array,
+    old_parity: jax.Array,
+    block_dirty: jax.Array,
+    stripe_dirty: jax.Array,
+    stripe_width: int = 4,
+    use_pallas: bool = True,
+    interpret: bool = True,
+):
+    """Masked checksum+parity refresh. Semantics == ref.fused_update."""
+    if not use_pallas:
+        return ref.fused_update(
+            lanes2d, old_checksums, old_parity, block_dirty, stripe_dirty,
+            stripe_width)
+    nb, L = lanes2d.shape
+    striped = _striped(lanes2d, stripe_width)
+    ns = striped.shape[0]
+    # Compact dirty stripe ids into the work queue; pad by repeating the last
+    # live id so trailing grid steps re-address the same block (DMA elided).
+    ids = jnp.nonzero(stripe_dirty, size=ns, fill_value=0)[0].astype(jnp.int32)
+    count = jnp.sum(stripe_dirty, dtype=jnp.int32)
+    last = ids[jnp.maximum(count - 1, 0)]
+    ids = jnp.where(jnp.arange(ns) < count, ids, last)
+    par_raw, cks_part = fused_update_striped(
+        striped, ids, count[None], interpret=interpret)
+    cks_new = xor_reduce(cks_part, (2,)).reshape(ns * stripe_width)[:nb]
+    cks = jnp.where(block_dirty, cks_new, old_checksums)
+    par = jnp.where(stripe_dirty[:, None], par_raw, old_parity)
+    return cks, par

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused, work-queue-driven checksum+parity update.
+
+This is the Vilamb hot loop (Algorithm 1 lines 7-18) as a single data pass,
+plus two TPU-native improvements over the paper's software loop:
+
+1. **Fusion** — the paper's thread reads each dirty page once for its
+   checksum and then re-reads the stripe for parity. Here one (1, P, TILE)
+   VMEM slab per grid step yields both the parity XOR *and* all P member
+   checksum partials: each dirty stripe is read exactly once (halves the
+   memory term; see EXPERIMENTS.md §Perf).
+
+2. **Work queue via scalar prefetch** — dirty-stripe ids are compacted into
+   an SMEM-prefetched index vector that drives the BlockSpec ``index_map``.
+   Grid steps beyond ``count`` re-address the last dirty stripe; Mosaic
+   skips the DMA when the block index is unchanged and ``pl.when`` skips the
+   compute, so the cost scales with the number of *dirty* stripes, not the
+   total — the kernel-level realization of the paper's "work ∝ dirty pages"
+   claim.
+
+Clean stripes are never addressed, so their output rows are untouched
+garbage; ops.py merges with the old arrays under the dirty masks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import GOLDEN, LANES, SALT2, fmix32, lane_tile, xor_reduce
+
+
+def _kernel(wids_ref, count_ref, x_ref, par_ref, cks_ref, *, tile: int, stripe_width: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(i < count_ref[0])
+    def _():
+        sid = wids_ref[i]
+        x = x_ref[0]  # (P, tile) uint32
+        par = xor_reduce(x, (0,))[None, :]  # (1, tile)
+
+        rows = tile // LANES
+        xv = x.reshape(stripe_width, rows, LANES)
+        r = jax.lax.broadcasted_iota(jnp.uint32, (stripe_width, rows, LANES), 1)
+        c = jax.lax.broadcasted_iota(jnp.uint32, (stripe_width, rows, LANES), 2)
+        p = jax.lax.broadcasted_iota(jnp.uint32, (stripe_width, rows, LANES), 0)
+        lanes = r * jnp.uint32(LANES) + c + jnp.uint32(j * tile)
+        bids = jnp.uint32(sid) * jnp.uint32(stripe_width) + p
+        salt = (bids * GOLDEN) ^ (lanes * SALT2)
+        h = fmix32(xv ^ salt)
+        partial = xor_reduce(h, (1,))[None, :, :]  # (1, P, 128)
+
+        @pl.when(j == 0)
+        def _init():
+            par_ref[...] = par
+            cks_ref[...] = partial
+
+        @pl.when(j != 0)
+        def _acc():
+            par_ref[...] ^= par
+            cks_ref[...] ^= partial
+
+
+def fused_update_striped(
+    striped: jax.Array,
+    work_ids: jax.Array,
+    count: jax.Array,
+    *,
+    max_tile: int = 4096,
+    interpret: bool = False,
+):
+    """Run the work-queue kernel over a (n_stripes, P, L) view.
+
+    Returns (parity_raw [ns, L], cks_partials_raw [ns, P, 128]); rows not in
+    the work queue contain stale/garbage values — callers must merge.
+    """
+    ns, P, L = striped.shape
+    tile = lane_tile(L, max_tile)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ns, L // tile),
+        in_specs=[
+            pl.BlockSpec((1, P, tile), lambda i, j, wids, cnt: (wids[i], 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda i, j, wids, cnt: (wids[i], j)),
+            pl.BlockSpec((1, P, LANES), lambda i, j, wids, cnt: (wids[i], 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tile=tile, stripe_width=P),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((ns, L), jnp.uint32),
+            jax.ShapeDtypeStruct((ns, P, LANES), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(work_ids, count, striped)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused masked checksum+parity update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import checksum, parity
+
+
+def fused_update(
+    lanes2d: jax.Array,
+    old_checksums: jax.Array,
+    old_parity: jax.Array,
+    block_dirty: jax.Array,
+    stripe_dirty: jax.Array,
+    stripe_width: int,
+):
+    """Reference semantics of Algorithm 1 lines 7-18 over a lane view.
+
+    * checksums recomputed for dirty blocks only (clean blocks keep stored
+      values so scrubbing can still catch their corruption);
+    * parity recomputed for stripes containing any dirty block.
+    """
+    cks = jnp.where(block_dirty, checksum.block_checksums(lanes2d), old_checksums)
+    par = parity.stripe_parity_masked(lanes2d, old_parity, stripe_dirty, stripe_width)
+    return cks, par

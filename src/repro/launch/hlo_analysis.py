@@ -1,0 +1,164 @@
+"""Roofline terms from compiled artifacts (DESIGN.md §7).
+
+collective_bytes is not in cost_analysis(): we parse the *partitioned*
+module text (``compiled.as_text()``) and sum effective ring-transfer bytes
+for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, using the group size from ``replica_groups``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+# TPU v5e target constants (per chip).
+PEAK_BF16_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s+(\([^)]*\)|[\w\[\],{}\d]+)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # [G,S]<=[N] iota form: S is the group size
+        return int(m.group(2))
+    return 1
+
+
+def effective_bytes(op: str, result_bytes: int, g: int) -> float:
+    """Ring-transfer bytes per chip."""
+    if op == "collective-permute":  # point-to-point: no replica_groups attr
+        return float(result_bytes)
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":          # result is the gathered buffer
+        return result_bytes * (g - 1) / g
+    if op == "reduce-scatter":      # result is the scattered shard
+        return result_bytes * (g - 1)
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)      # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]
+    per_op_count: Dict[str, int]
+    total_bytes: float
+
+    def summary(self) -> Dict:
+        return {"total_bytes": self.total_bytes,
+                "per_op_bytes": self.per_op, "per_op_count": self.per_op_count}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    per_op: Dict[str, float] = {}
+    per_cnt: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        g = _group_size(line)
+        eb = effective_bytes(op, b, g)
+        per_op[op] = per_op.get(op, 0.0) + eb
+        per_cnt[op] = per_cnt.get(op, 0) + 1
+    return CollectiveStats(per_op, per_cnt, sum(per_op.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+    roofline_fraction: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    coll_bytes_per_chip: float,
+    chips: int,
+    model_flops: float,
+) -> Roofline:
+    compute_s = flops_per_chip / PEAK_BF16_FLOPS
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = coll_bytes_per_chip / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo_flops = flops_per_chip * chips
+    useful = model_flops / total_hlo_flops if total_hlo_flops else 0.0
+    # roofline fraction: useful model FLOPs over what the dominant term's
+    # wall-time could have delivered at peak compute.
+    dom = max(terms.values())
+    frac = (model_flops / chips / PEAK_BF16_FLOPS) / dom if dom > 0 else 0.0
+    return Roofline(compute_s, memory_s, collective_s, flops_per_chip,
+                    bytes_per_chip, coll_bytes_per_chip, model_flops,
+                    useful, bottleneck, frac)
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

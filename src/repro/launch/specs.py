@@ -1,0 +1,285 @@
+"""Dry-run setup: ShapeDtypeStruct inputs + shardings for every cell.
+
+``input_specs()`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins with no device allocation. Training cells lower
+``train_step``; decode cells lower ``serve_step`` (one token against a
+seq_len KV cache); prefill cells lower the prefill forward.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import flatten_dict, unflatten_dict
+from repro.core.engine import RedundancyConfig, RedundancyEngine
+from repro.data.pipeline import batch_structs
+from repro.dist.sharding import cache_specs, param_specs
+from repro.models import build_model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.parallel import ParallelCtx
+from repro.optim import AdamW, warmup_cosine
+from repro.serve.serve_loop import make_decode_step
+from repro.train.state import TrainState, protected_structs
+from repro.train.train_loop import make_train_step
+
+ENC_MEMORY_LEN = 1024  # precomputed encoder memory length for decode cells
+
+POD_FSDP_THRESHOLD = 8 * 2**30  # in-pod state bytes/chip above which ZeRO spans pods
+
+
+def make_ctx(cfg: ModelConfig, mesh: Optional[Mesh]) -> ParallelCtx:
+    """Parallelism context; 400B-class state enables cross-pod FSDP (ZeRO
+    over DCN) when a pod axis exists.
+
+    The trigger uses the *within-pod* state bytes (params + 2 moments over
+    data x model only): without pod-FSDP the pod axis replicates state, so
+    extra pods don't relieve per-chip HBM.
+    """
+    if mesh is None:
+        return ParallelCtx(mesh=None)
+    axes = dict(mesh.shape)
+    chips_in_pod = int(np.prod([v for k, v in axes.items() if k != "pod"]))
+    pb = jnp.dtype(cfg.param_dtype).itemsize
+    mb = jnp.dtype(cfg.moment_dtype).itemsize
+    state = cfg.param_count() * (pb + 2 * mb) / chips_in_pod
+    if "pod" in axes and state > POD_FSDP_THRESHOLD:
+        return ParallelCtx(mesh=mesh, fsdp_axis=("pod", "data"))
+    return ParallelCtx(mesh=mesh)
+
+
+def path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_shardings(tree, flat_specs: Dict[str, P], mesh: Mesh):
+    """Sharding pytree with the same treedef as ``tree`` (preserves empty
+    subtrees, unlike flatten/unflatten round-trips)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: NamedSharding(mesh, flat_specs[path_str(kp)]), tree)
+
+
+@dataclasses.dataclass
+class TrainSetup:
+    model: Any
+    step_fn: Any
+    state_struct: Any
+    state_sharding: Any
+    batch_struct: Dict[str, jax.ShapeDtypeStruct]
+    batch_sharding: Any
+    engine: Optional[RedundancyEngine]
+    fallback_log: list
+    redundancy_fn: Any = None
+    red_leaves_struct: Any = None
+
+
+def default_accum(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh]) -> int:
+    """Microbatching heuristic: keep ~<=16k tokens per data-shard when the
+    fp32 grad accumulator is affordable (small/mid models); big-param archs
+    (accumulator >= ~4 GB/chip) run accum=1 — their activations are small
+    relative to state anyway."""
+    if mesh is None or shape.kind != "train":
+        return 1
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]))
+    chips = int(np.prod(list(mesh.shape.values())))
+    tokens_per_ds = shape.seq_len * shape.global_batch // max(dp, 1)
+    accum = max(1, tokens_per_ds // 16384)
+    grad_acc_bytes = cfg.param_count() * 4 / chips
+    if grad_acc_bytes > 4 * 2**30:
+        return 1
+    while accum > 1 and (shape.global_batch // dp) % accum:
+        accum -= 1
+    return min(accum, 8)
+
+
+def build_train_setup(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Optional[Mesh],
+    mode: str = "vilamb",
+    period_steps: int = 8,
+    use_kernels: bool = False,
+    accum_steps: Optional[int] = None,
+) -> TrainSetup:
+    ctx = make_ctx(cfg, mesh)
+    model = build_model(cfg, ctx)
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = AdamW(lr=warmup_cosine(3e-4, 100, 10000), moment_dtype=cfg.moment_dtype)
+    opt_struct = jax.eval_shape(opt.init, params_struct)
+
+    flat_p = flatten_dict(params_struct)
+    p_specs, log = param_specs(flat_p, ctx)
+    prot_struct = protected_structs(params_struct, opt_struct)
+    prot_specs = {}
+    for k in prot_struct:
+        root, _, suffix = k.partition("/")
+        prot_specs[k] = p_specs[suffix]
+
+    engine = None
+    red_struct: Any = {}
+    red_shard: Any = {}
+    if mode != "none":
+        rcfg = RedundancyConfig(mode=mode, period_steps=period_steps,
+                                use_kernels=use_kernels)
+        engine = RedundancyEngine(prot_struct, rcfg, mesh=mesh, specs=prot_specs)
+        red_struct = engine.red_structs()
+        red_shard = engine.red_shardings() if mesh is not None else {}
+
+    state_struct = TrainState(
+        params=params_struct, opt=opt_struct, red=red_struct,
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+
+    state_sharding = None
+    if mesh is not None:
+        rep = NamedSharding(mesh, P())
+        p_shard = tree_shardings(params_struct, p_specs, mesh)
+        state_sharding = TrainState(
+            params=p_shard,
+            opt={"m": p_shard, "v": p_shard, "count": rep},
+            red=red_shard, step=rep)
+
+    b_struct = batch_structs(cfg, shape)
+    b_shard = None
+    if mesh is not None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        k = int(np.prod([mesh.shape[a] for a in dp]))
+        spec = P(dp) if shape.global_batch % k == 0 else P(None)
+        b_shard = {kk: NamedSharding(mesh, spec) for kk in b_struct}
+
+    if accum_steps is None:
+        accum_steps = default_accum(cfg, shape, mesh)
+    if accum_steps > 1:
+        log.append(f"grad accumulation: {accum_steps} microbatches")
+    step_fn = make_train_step(model, opt, engine, mode, accum_steps=accum_steps)
+    red_fn = None
+    if engine is not None:
+        from repro.train.train_loop import make_redundancy_step
+        red_fn = make_redundancy_step(engine)
+    return TrainSetup(model, step_fn, state_struct, state_sharding,
+                      b_struct, b_shard, engine, log, red_fn)
+
+
+@dataclasses.dataclass
+class DecodeSetup:
+    model: Any
+    step_fn: Any
+    args_struct: tuple
+    args_sharding: Optional[tuple]
+    engine: Optional[RedundancyEngine]
+    fallback_log: list
+
+
+def build_decode_setup(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Optional[Mesh],
+    mode: str = "vilamb",
+    use_kernels: bool = False,
+) -> DecodeSetup:
+    ctx = make_ctx(cfg, mesh)
+    model = build_model(cfg, ctx)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = ENC_MEMORY_LEN if cfg.enc_dec else 0
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat_p = flatten_dict(params_struct)
+    p_specs, log = param_specs(flat_p, ctx)
+
+    caches_struct = jax.eval_shape(lambda: model.init_caches(B, S, enc_len))
+    flat_c = flatten_dict(caches_struct)
+    c_specs, clog = cache_specs(cfg, flat_c, ctx, B)
+    log = log + clog
+
+    engine = None
+    red_struct: Any = {}
+    red_shard: Any = {}
+    if mode != "none":
+        rcfg = RedundancyConfig(mode=mode, use_kernels=use_kernels)
+        engine = RedundancyEngine(flat_c, rcfg, mesh=mesh, specs=c_specs)
+        red_struct = engine.red_structs()
+        red_shard = engine.red_shardings() if mesh is not None else {}
+
+    token_struct = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    args_struct = (params_struct, caches_struct, red_struct, token_struct, pos_struct)
+
+    args_sharding = None
+    if mesh is not None:
+        rep = NamedSharding(mesh, P())
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        k = int(np.prod([mesh.shape[a] for a in dp]))
+        tok_spec = P(dp) if B % k == 0 else P(None)
+        args_sharding = (
+            tree_shardings(params_struct, p_specs, mesh),
+            tree_shardings(caches_struct, c_specs, mesh),
+            red_shard,
+            NamedSharding(mesh, tok_spec),
+            rep,
+        )
+
+    step_fn = make_decode_step(model, engine, mode)
+    return DecodeSetup(model, step_fn, args_struct, args_sharding, engine, log)
+
+
+@dataclasses.dataclass
+class PrefillSetup:
+    model: Any
+    step_fn: Any
+    args_struct: tuple
+    args_sharding: Optional[tuple]
+    fallback_log: list
+    out_sharding: Optional[tuple] = None
+
+
+def build_prefill_setup(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh]
+) -> PrefillSetup:
+    ctx = make_ctx(cfg, mesh)
+    model = build_model(cfg, ctx)
+    B, S = shape.global_batch, shape.seq_len
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat_p = flatten_dict(params_struct)
+    p_specs, log = param_specs(flat_p, ctx)
+    b_struct = batch_structs(cfg, shape)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, S)
+
+    args_sharding = None
+    out_sharding = None
+    if mesh is not None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        k = int(np.prod([mesh.shape[a] for a in dp]))
+        spec = P(dp) if B % k == 0 else P(None)
+        args_sharding = (
+            tree_shardings(params_struct, p_specs, mesh),
+            {kk: NamedSharding(mesh, spec) for kk in b_struct},
+        )
+        # Constrain the prefilled caches to the decode-cache layout so the
+        # (large) outputs land sharded, not replicated.
+        enc_len = ENC_MEMORY_LEN if cfg.enc_dec else 0
+        caches_struct = jax.eval_shape(lambda: model.init_caches(B, S, enc_len))
+        c_specs, clog = cache_specs(cfg, flatten_dict(caches_struct), ctx, B)
+        log.extend(clog)
+        out_sharding = (
+            NamedSharding(mesh, P(spec[0] if len(spec) else None, None)),
+            tree_shardings(caches_struct, c_specs, mesh),
+            NamedSharding(mesh, P()),   # pos scalar
+        )
+    return PrefillSetup(model, prefill, (params_struct, b_struct),
+                        args_sharding, log, out_sharding)

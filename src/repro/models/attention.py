@@ -1,0 +1,254 @@
+"""GQA attention: statically-tiled causal (flash-semantics) + decode paths.
+
+Long sequences use a trace-time tiled schedule: python loops over (q, kv)
+tiles skip fully-masked tiles *at trace time*, so the compiled HLO contains
+only the lower-triangle work (~half the FLOPs of a masked dense attention)
+and never materializes the full S x S score matrix.
+
+KV caches use a sequence-major layout ``(S_max, B, KV, hd)`` so that
+(a) decode writes are a single leading-axis dynamic_update_slice, and
+(b) Vilamb page-level dirty tracking maps pages to leading-axis rows
+    (`core.blocks.row_block_mask`), exactly like the paper's page table.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init
+from .parallel import NO_PARALLEL, ParallelCtx
+
+NEG_INF = -1e30
+
+
+def _head_axis(ctx: ParallelCtx, n: int):
+    return ctx.tp_axis if ctx.divides(n, ctx.tp_axis) else None
+
+
+@jax.custom_vjp
+def grad_cast(x):
+    """Identity whose COTANGENT is cast back to the primal dtype.
+
+    Attention keeps f32 score/normalizer accumulators (intentional); without
+    a boundary the f32-ness propagates through dq/dk/dv into the projection
+    transposes, turning every (B,S,d) gradient tensor and weight-grad
+    all-reduce fp32 (2x wire bytes + 2x backward buffers). §Perf knob
+    ``bf16_grad_boundaries``.
+    """
+    return x
+
+
+def _gc_fwd(x):
+    return x, jnp.zeros((0,), x.dtype)  # dtype token (residuals must be JAX types)
+
+
+def _gc_bwd(token, g):
+    return (g.astype(token.dtype),)
+
+
+grad_cast.defvjp(_gc_fwd, _gc_bwd)
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, H, hd), in_axis=0, dtype=dtype),
+        "wk": dense_init(k2, (d, KV, hd), in_axis=0, dtype=dtype),
+        "wv": dense_init(k3, (d, KV, hd), in_axis=0, dtype=dtype),
+        "wo": dense_init(k4, (H, hd, d), in_axis=0, scale=1.0, dtype=dtype),
+    }
+
+
+def _qkv(params, x, cfg, positions, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def expand_kv(k, n_heads: int):
+    """Broadcast GQA KV heads up to n_heads.
+
+    Keeps every attention einsum on the H-sharded layout: reshaping a
+    TP-sharded H dim into (KV, G) is inexpressible for GSPMD when
+    KV < |model| and silently replicates q and the S^2 score tensors
+    (tens of GB at jamba scale). Expanding the (small, replicated) k/v to H
+    is a local slice per shard instead.
+    """
+    B, S, KV, hd = k.shape
+    G = n_heads // KV
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, G, hd)).reshape(
+        B, S, n_heads, hd)
+
+
+def _tile_attn(q, k, v, scale, mask=None):
+    """One (q-tile, kv-tile) partial: returns (acc, lse-style m, l).
+
+    q: (B,Sq,H,hd)  k,v: (B,Sk,H,hd) (KV already expanded to H).
+    """
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                       # (B,H,Sq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqs,bshd->bhqd", p.astype(v.dtype), v).astype(jnp.float32)
+    return acc, m, l
+
+
+def _merge(acc1, m1, l1, acc2, m2, l2):
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    return (acc1 * a1[..., None] + acc2 * a2[..., None], m, l1 * a1 + l2 * a2)
+
+
+def pick_tile(B: int, H: int, S: int, shards: int = 1,
+              budget_bytes: int = 256 * 2**20) -> int:
+    """Largest q/kv tile whose fp32 score block fits the per-chip budget."""
+    for t in (4096, 2048, 1024, 512):
+        if S % t == 0 and B * H * t * t * 4 // max(shards, 1) <= budget_bytes:
+            return t
+    return 512 if S % 512 == 0 else S
+
+
+def causal_attention(
+    params, x, cfg, positions=None, rope: bool = True, tile: int = 0,
+    shards: int = 1, ctx: ParallelCtx = NO_PARALLEL,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal GQA over (B,S,d). Returns (out, (k, v)) for cache prefill."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    if not tile:
+        tile = pick_tile(B, H, S, shards)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(params, x, cfg, positions, rope)
+    if getattr(cfg, "bf16_grad_boundaries", False):
+        q, k, v = grad_cast(q), grad_cast(k), grad_cast(v)
+    ha = _head_axis(ctx, H)
+    if getattr(cfg, "attn_kv_gather_first", False):
+        # §Perf: gather the RAW (kv-head) k/v over the SP-sharded seq dim
+        # first — KV/H-fold fewer bytes than gathering the expanded tensors —
+        # then expansion to H heads is a local slice under the head-sharded
+        # constraint.
+        k = ctx.constrain(k, ctx.batch_spec, None, None, None)
+        v = ctx.constrain(v, ctx.batch_spec, None, None, None)
+    ke = expand_kv(k, H)
+    ve = expand_kv(v, H)
+    # Pin the expanded-KV layout onto the TP axis: without the constraint
+    # GSPMD resolves the broadcast-reshape as "replicated" and materializes
+    # full-size q/k/v and S^2 score tensors per chip.
+    q = ctx.constrain(q, ctx.batch_spec, None, ha, None)
+    ke = ctx.constrain(ke, ctx.batch_spec, None, ha, None)
+    ve = ctx.constrain(ve, ctx.batch_spec, None, ha, None)
+    scale = 1.0 / math.sqrt(hd)
+
+    if getattr(cfg, "use_flash_kernel", False):
+        # Pallas flash kernel (forward-only): prefill/serving path. Keeps the
+        # score tile in VMEM — the fix for the memory-bound prefill cells
+        # (§Roofline). Training keeps the differentiable jnp path.
+        from repro.kernels.flash_attn.ops import flash_attention
+        out = flash_attention(q, ke, ve, causal=True,
+                              interpret=jax.default_backend() == "cpu")
+        return jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"]), (k, v)
+
+    if S <= tile:
+        mask = (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])[None, None]
+        acc, m, l = _tile_attn(q, ke, ve, scale, mask)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+    else:
+        assert S % tile == 0
+        nt = S // tile
+        outs = []
+        for i in range(nt):                      # static schedule
+            qi = q[:, i * tile:(i + 1) * tile]
+            acc = m = l = None
+            for j in range(i + 1):               # lower triangle only
+                kj = ke[:, j * tile:(j + 1) * tile]
+                vj = ve[:, j * tile:(j + 1) * tile]
+                mask = None
+                if j == i:                        # diagonal tile: causal mask
+                    mask = (jnp.arange(tile)[:, None] >= jnp.arange(tile)[None, :])[None, None]
+                a2, m2, l2 = _tile_attn(qi, kj, vj, scale, mask)
+                if acc is None:
+                    acc, m, l = a2, m2, l2
+                else:
+                    acc, m, l = _merge(acc, m, l, a2, m2, l2)
+            outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+        out = jnp.concatenate(outs, axis=2)      # (B,H,S,hd)
+
+    out = out.transpose(0, 2, 1, 3).astype(x.dtype)  # (B,S,H,hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def full_attention(params, x, cfg, kv_x=None, rope: bool = False,
+                   ctx: ParallelCtx = NO_PARALLEL):
+    """Non-causal (encoder / cross) attention. kv_x defaults to x."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_x is None else kv_x
+    pos_q = jnp.arange(S)[None, :]
+    pos_k = jnp.arange(src.shape[1])[None, :]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if rope:
+        q = apply_rope(q, pos_q, cfg.rope_theta)
+        k = apply_rope(k, pos_k, cfg.rope_theta)
+    ha = _head_axis(ctx, H)
+    q = ctx.constrain(q, ctx.batch_spec, None, ha, None)
+    ke = ctx.constrain(expand_kv(k, H), ctx.batch_spec, None, ha, None)
+    ve = ctx.constrain(expand_kv(v, H), ctx.batch_spec, None, ha, None)
+    acc, m, l = _tile_attn(q, ke, ve, 1.0 / math.sqrt(hd))
+    out = (acc / jnp.maximum(l[..., None], 1e-30))
+    out = out.transpose(0, 2, 1, 3).astype(x.dtype)  # (B,S,H,hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+# ------------------------------------------------------------------ decode
+def decode_attention(
+    params, x, cfg, k_cache, v_cache, pos, rope: bool = True, cross: bool = False
+):
+    """One-token decode. x: (B,1,d); caches: (S_max, B, KV, hd) seq-major.
+
+    Returns (out, new_k_cache, new_v_cache). For cross attention the caches
+    are the precomputed encoder memory and are not updated.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    S_max = k_cache.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if rope:
+        q = apply_rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    qg = q.reshape(B, KV, G, hd)
+
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if rope:
+            k_new = apply_rope(k_new, jnp.full((B, 1), pos), cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype).transpose(1, 0, 2, 3), pos, axis=0)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype).transpose(1, 0, 2, 3), pos, axis=0)
+        valid = jnp.arange(S_max) <= pos
+    else:
+        valid = jnp.arange(S_max) < S_max  # full encoder memory
+
+    s = jnp.einsum("bkgd,sbkd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,sbkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), k_cache, v_cache

@@ -1,0 +1,203 @@
+"""Model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+VOCAB_PAD_MULTIPLE = 2048  # pad vocab so 16-way TP divides it cleanly
+
+
+def pad_vocab(v: int, mult: int = VOCAB_PAD_MULTIPLE) -> int:
+    return -(-v // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0           # expert hidden width (defaults to d_ff)
+    moe_every: int = 1          # MoE FFN every k-th layer (jamba: 2)
+    dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+
+    # --- hybrid (jamba): one attention layer per `attn_every` layers ---
+    attn_every: int = 0
+
+    # --- SSM ---
+    ssm_kind: str = ""          # mamba | xlstm
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2             # mamba d_inner = expand * d_model
+    slstm_every: int = 0        # xlstm: one sLSTM per k layers (7:1 ratio -> 8)
+
+    # --- norm / activation / positions ---
+    norm: str = "rmsnorm"       # rmsnorm | layernorm | nonparam_ln
+    activation: str = "swiglu"  # swiglu | squared_relu | gelu
+    rope_theta: float = 10000.0
+
+    # --- structure ---
+    enc_dec: bool = False       # seamless: n_layers encoder + n_layers decoder
+    frontend: str = ""          # "" | vision | audio  (stubbed per assignment)
+    frontend_len: int = 256     # patches/frames supplied by input_specs
+    tie_embeddings: bool = False
+    head_dim: int = 0           # 0 -> d_model // n_heads
+
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"   # bf16 for the 400B+ archs (HBM budget)
+    remat: str = "full"             # none | full
+    # Unroll the layer scan at lowering time. Used by the dry-run: XLA cost
+    # analysis counts while-loop bodies once, so scanned stacks under-report
+    # FLOPs/bytes/collectives by ~n_groups; unrolling makes the compiled
+    # artifact's cost analysis exact (inner SSM chunk scans remain, <6% of
+    # FLOPs — see EXPERIMENTS.md §Dry-run notes).
+    unroll_layers: bool = False
+    # Perf knobs (hillclimbed in EXPERIMENTS.md §Perf).
+    seq_parallel: bool = True   # Megatron-SP activation sharding over TP axis
+    attn_tile: int = 0          # 0 = auto (pick_tile budget)
+    norm_vjp: str = "autodiff"  # "custom" = hand-written bf16-cotangent VJP
+    # Default ON after §Perf A5: gathering the raw (kv-head) k/v over the
+    # SP seq dim before head expansion cut the collective term 22% and the
+    # memory term 26% with no downside. (The §Roofline baseline table was
+    # measured with the knob off; see §Perf for both.)
+    attn_kv_gather_first: bool = True
+    bf16_grad_boundaries: bool = False  # cast attention cotangents to bf16
+    opt_grad_barrier: bool = False      # stop f32 converts hoisting past grad AR
+    use_flash_kernel: bool = False      # Pallas flash attn (fwd-only; serving)
+
+    # serving
+    kv_page_tokens: int = 512   # dirty-tracking page granularity (tokens)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def d_inner(self) -> int:   # mamba inner width
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, self.d_model // 16)
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def layer_kind(self, i: int) -> str:
+        """Mixer kind of layer i: attn | mamba | mlstm | slstm."""
+        if self.ssm_kind == "xlstm":
+            return "slstm" if (self.slstm_every and i % self.slstm_every == self.slstm_every - 1) else "mlstm"
+        if self.attn_every:  # hybrid: 1 attention per attn_every layers
+            return "attn" if i % self.attn_every == self.attn_every // 2 else "mamba"
+        return "attn"
+
+    def ffn_kind(self, i: int) -> str:
+        """FFN kind of layer i: dense | moe | none (xlstm has no FFN)."""
+        if self.ssm_kind == "xlstm":
+            return "none"
+        if self.n_experts and i % self.moe_every == self.moe_every - 1:
+            return "moe"
+        return "dense"
+
+    @property
+    def group_size(self) -> int:
+        """Layers per scan group (pattern period)."""
+        if self.ssm_kind == "xlstm":
+            return self.slstm_every or 1
+        p = 1
+        if self.attn_every:
+            p = self.attn_every
+        if self.n_experts and self.moe_every > 1:
+            import math
+            p = p * self.moe_every // math.gcd(p, self.moe_every)
+        return p
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.group_size == 0, (self.n_layers, self.group_size)
+        return self.n_layers // self.group_size
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM/hybrid)."""
+        return self.ssm_kind != "" or self.attn_every > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline + sanity checks)."""
+        d, hd = self.d_model, self.hd
+        total = 0
+        emb = self.vocab_size * d
+        total += emb if self.tie_embeddings else 2 * emb
+        for i in range(self.n_layers):
+            k = self.layer_kind(i)
+            if k == "attn":
+                total += d * self.n_heads * hd * 2          # q, o
+                total += d * self.n_kv_heads * hd * 2       # k, v
+            elif k == "mamba":
+                di, ds, dtr = self.d_inner, self.d_state, self.dt_rank
+                total += d * 2 * di + di * self.d_conv + di
+                total += di * (dtr + 2 * ds) + dtr * di + di
+                total += di * ds + di + di * d
+            elif k in ("mlstm", "slstm"):
+                total += 4 * d * d + 2 * d * self.n_heads + 2 * d
+            f = self.ffn_kind(i)
+            n_mats = 3 if self.activation == "swiglu" else 2
+            if f == "dense":
+                total += n_mats * d * self.d_ff
+            elif f == "moe":
+                total += self.n_experts * n_mats * d * self.expert_d_ff
+                total += d * self.n_experts  # router
+                if self.dense_residual:
+                    total += n_mats * d * self.d_ff
+            total += 2 * d if self.norm != "nonparam_ln" else 0
+        if self.enc_dec:  # encoder stack + cross attention in decoder
+            for i in range(self.n_layers):
+                total += d * self.n_heads * hd * 2 + d * self.n_kv_heads * hd * 2
+                n_mats = 3 if self.activation == "swiglu" else 2
+                total += n_mats * d * self.d_ff
+                total += d * self.n_heads * hd * 2 + d * self.n_kv_heads * hd * 2  # cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE top-k instead of all experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        n_mats = 3 if self.activation == "swiglu" else 2
+        per_expert = n_mats * d * self.expert_d_ff
+        n_moe_layers = sum(1 for i in range(self.n_layers) if self.ffn_kind(i) == "moe")
+        return (self.param_count()
+                - n_moe_layers * self.n_experts * per_expert
+                + n_moe_layers * self.top_k * per_expert)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,206 @@
+"""Shared layer primitives: norms, RoPE, dense FFNs, initializers."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = -2, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+# Reductions run in fp32 (stability); the (B,S,d)-sized products stay in the
+# input dtype. A full-fp32 norm keeps fp32 activation/cotangent copies of the
+# entire residual stream alive through the backward pass (gigabytes/layer at
+# jamba scale).
+def rmsnorm(x, scale, eps: float = 1e-6):
+    # f32 accumulation WITHOUT materializing a converted copy of x: the
+    # einsum accumulates bf16 inputs into an f32 (B,S) result directly.
+    sq = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    var = (sq / x.shape[-1])[..., None]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = x * inv
+    if scale is not None:
+        y = y * (1.0 + scale).astype(x.dtype)
+    return y
+
+
+# Custom-VJP norms (§Perf): autodiff of the f32-accumulating variance einsum
+# emits an fp32 (B,S,d) cotangent contribution that promotes the entire
+# residual-stream gradient chain to fp32 (doubling every backward activation
+# buffer and TP/DP collective). The hand-written backward keeps all
+# (B,S,d)-sized tensors in the input dtype; only (B,S)-sized reductions are
+# fp32. Enabled per-arch via ModelConfig.norm_vjp="custom".
+import functools as _ft
+
+
+def _f32_dot_last(a, b):
+    return jnp.einsum("...d,...d->...", a, b, preferred_element_type=jnp.float32)
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm_cv(x, scale, eps: float = 1e-6):
+    return rmsnorm(x, scale, eps)
+
+
+def _rms_fwd(x, scale, eps):
+    var = (_f32_dot_last(x, x) / x.shape[-1])[..., None]
+    inv = jax.lax.rsqrt(var + eps)                       # f32 (B,S,1)
+    y = x * inv.astype(x.dtype)
+    if scale is not None:
+        y = y * (1.0 + scale).astype(x.dtype)
+    return y, (x, scale, inv)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale, inv = res
+    d = x.shape[-1]
+    s = (1.0 + scale).astype(g.dtype) if scale is not None else None
+    gs = g * s if s is not None else g                    # bf16 (B,S,d)
+    xhat = x * inv.astype(x.dtype)                        # bf16
+    t = (_f32_dot_last(gs, x) / d)[..., None]             # f32 (B,S,1)
+    dx = gs * inv.astype(g.dtype) - x * (t * inv ** 3).astype(g.dtype)
+    dscale = None
+    if scale is not None:
+        dims = tuple(range(g.ndim - 1))
+        dscale = jnp.sum((g * xhat).astype(jnp.float32), axis=dims).astype(scale.dtype)
+    return dx, dscale
+
+
+rmsnorm_cv.defvjp(_rms_fwd, _rms_bwd)
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm_cv(x, scale, bias, eps: float = 1e-5):
+    return layernorm(x, scale, bias, eps)
+
+
+def _ln_fwd(x, scale, bias, eps):
+    xf32_mean = (jnp.einsum("...d->...", x, preferred_element_type=jnp.float32)
+                 / x.shape[-1])[..., None]
+    var = (_f32_dot_last(x, x) / x.shape[-1])[..., None] - jnp.square(xf32_mean)
+    inv = jax.lax.rsqrt(jnp.maximum(var, 0.0) + eps)      # f32 (B,S,1)
+    xhat = (x - xf32_mean.astype(x.dtype)) * inv.astype(x.dtype)
+    y = xhat
+    if scale is not None:
+        y = y * scale.astype(x.dtype) + bias.astype(x.dtype)
+    return y, (xhat, scale, inv)
+
+
+def _ln_bwd(eps, res, g):
+    xhat, scale, inv = res
+    d = xhat.shape[-1]
+    gs = g * scale.astype(g.dtype) if scale is not None else g
+    m1 = (jnp.einsum("...d->...", gs, preferred_element_type=jnp.float32) / d)[..., None]
+    m2 = (_f32_dot_last(gs, xhat) / d)[..., None]
+    dx = inv.astype(g.dtype) * (gs - m1.astype(g.dtype)
+                                - xhat * m2.astype(g.dtype))
+    dscale = dbias = None
+    if scale is not None:
+        dims = tuple(range(g.ndim - 1))
+        dscale = jnp.sum((g * xhat).astype(jnp.float32), axis=dims).astype(scale.dtype)
+        dbias = jnp.sum(g.astype(jnp.float32), axis=dims).astype(scale.dtype)
+    return dx, dscale, dbias
+
+
+layernorm_cv.defvjp(_ln_fwd, _ln_bwd)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True) - jnp.square(mu)
+    inv = jax.lax.rsqrt(jnp.maximum(var, 0.0) + eps)
+    y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    if scale is not None:
+        y = y * scale.astype(x.dtype) + bias.astype(x.dtype)
+    return y
+
+
+def nonparam_ln(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    return layernorm(x, None, None, eps)
+
+
+def make_norm(cfg):
+    kind = cfg.norm
+    custom = getattr(cfg, "norm_vjp", "autodiff") == "custom"
+
+    def init(key, d):
+        if kind == "nonparam_ln":
+            return {}
+        if kind == "layernorm":
+            return {"scale": jnp.ones((d,), jnp.float32),
+                    "bias": jnp.zeros((d,), jnp.float32)}
+        return {"scale": jnp.zeros((d,), jnp.float32)}  # rms, (1+scale) form
+
+    def apply(params, x):
+        if kind == "nonparam_ln":
+            return layernorm_cv(x, None, None) if custom else nonparam_ln(x)
+        if kind == "layernorm":
+            if custom:
+                return layernorm_cv(x, params["scale"], params["bias"])
+            return layernorm(x, params["scale"], params["bias"])
+        if custom:
+            return rmsnorm_cv(x, params["scale"])
+        return rmsnorm(x, params["scale"])
+
+    return init, apply
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., H, hd) with positions broadcastable.
+
+    Angles/cos/sin are f32 (small, (S, hd/2)); the rotation itself runs in
+    the input dtype — converting q/k to f32 here puts an f32 copy of every
+    attention input on the sequence-parallel all-gather path (2x wire bytes;
+    EXPERIMENTS.md §Perf A3).
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1)
+
+
+# ----------------------------------------------------------------- FFN
+def ffn_init(key, cfg, d_ff: Optional[int] = None, dtype=jnp.float32):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"wi": dense_init(k1, (d, ff), dtype=dtype),
+                "wg": dense_init(k2, (d, ff), dtype=dtype),
+                "wo": dense_init(k3, (ff, d), dtype=dtype)}
+    return {"wi": dense_init(k1, (d, ff), dtype=dtype),
+            "wo": dense_init(k3, (ff, d), dtype=dtype)}
+
+
+def ffn_apply(params, x, cfg):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif cfg.activation == "squared_relu":   # nemotron-4
+        h = jnp.square(jax.nn.relu(x @ params["wi"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]

@@ -1,0 +1,146 @@
+"""Mamba (selective SSM) block for the jamba hybrid architecture.
+
+Training/prefill uses a two-level scan: an outer ``lax.scan`` over sequence
+chunks carrying the (B, d_inner, d_state) recurrent state, with a
+within-chunk associative scan. The (B, chunk, d_inner, d_state) discretized
+tensors are materialized only per chunk (rematerialized in the backward
+pass), and d_inner is sharding-constrained onto the TP axis, keeping the
+working set bounded — a pure-JAX stand-in for the fused Mamba kernel (the
+paper under reproduction contributes no SSM kernel; see DESIGN.md §3).
+
+Decode is the O(1) recurrent step over carried (ssm_state, conv_state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .parallel import ParallelCtx, NO_PARALLEL
+from jax.sharding import PartitionSpec as P
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d, di, ds, dtr, dc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.d_conv
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), in_axis=0, dtype=dtype),
+        "conv_w": dense_init(ks[1], (dc, di), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), in_axis=0, dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), in_axis=0, dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), in_axis=0, dtype=dtype),
+    }
+
+
+def _causal_conv_chunk(x, conv_state, w, b):
+    """Depthwise causal conv over a chunk. x: (B,C,di); conv_state: (B,dc-1,di)."""
+    dc = w.shape[0]
+    full = jnp.concatenate([conv_state, x], axis=1)            # (B, C+dc-1, di)
+    out = sum(full[:, j:j + x.shape[1]] * w[j][None, None, :] for j in range(dc))
+    new_state = full[:, -(dc - 1):] if dc > 1 else conv_state
+    return out + b[None, None, :], new_state
+
+
+def _ssm_chunk(xc, dt, Bc, Cc, A, D, h0):
+    """Selective scan within one chunk via associative scan.
+
+    xc,dt:(B,C,di)  Bc,Cc:(B,C,ds)  A:(di,ds)  h0:(B,di,ds)
+    """
+    Ab = jnp.exp(dt[..., None] * A[None, None])                 # (B,C,di,ds)
+    Bx = (dt * xc)[..., None] * Bc[:, :, None, :]               # (B,C,di,ds)
+
+    def combine(a, b):
+        a_a, b_a = a
+        a_b, b_b = b
+        return a_a * a_b, b_a * a_b + b_b
+
+    cumA, h_local = jax.lax.associative_scan(combine, (Ab, Bx), axis=1)
+    h = h_local + cumA * h0[:, None]                            # (B,C,di,ds)
+    y = jnp.einsum("bcds,bcs->bcd", h, Cc) + D[None, None] * xc
+    return y, h[:, -1]
+
+
+def mamba_apply(
+    params, x, cfg, ctx: ParallelCtx = NO_PARALLEL, chunk: int = 128
+) -> jax.Array:
+    """Full-sequence mamba mixer. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    dt_ = x.dtype
+    xz = x @ params["in_proj"].astype(dt_)
+    xz = ctx.constrain(xz, ctx.batch_spec, None, ctx.tp_axis)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    xs = xs.reshape(B, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+    zs = z.reshape(B, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+
+    A = -jnp.exp(params["A_log"])
+
+    def step(carry, inp):
+        h0, conv_state = carry
+        xc, zc = inp
+        xc, conv_state = _causal_conv_chunk(
+            xc, conv_state, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_))
+        xc = jax.nn.silu(xc)
+        proj = xc @ params["x_proj"].astype(dt_)               # (B,C,dtr+2ds)
+        dt_r, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+        dt = jax.nn.softplus(
+            (dt_r @ params["dt_proj"].astype(dt_)).astype(jnp.float32)
+            + params["dt_bias"][None, None])
+        y, h1 = _ssm_chunk(
+            xc.astype(jnp.float32), dt, Bc.astype(jnp.float32),
+            Cc.astype(jnp.float32), A, params["D"], h0)
+        y = (y.astype(dt_) * jax.nn.silu(zc))
+        return (h1, conv_state), y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    conv0 = jnp.zeros((B, cfg.d_conv - 1, di), dt_)
+    step_fn = jax.checkpoint(step) if cfg.remat != "none" else step
+    (hT, convT), ys = jax.lax.scan(step_fn, (h0, conv0), (xs, zs))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = ctx.constrain(y, ctx.batch_spec, None, ctx.tp_axis)
+    return y @ params["out_proj"].astype(dt_), {"h": hT, "conv": convT}
+
+
+def mamba_init_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params, x, cfg, cache):
+    """One-token recurrent step. x: (B,1,d)."""
+    B = x.shape[0]
+    di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    dt_ = x.dtype
+    xz = x[:, 0] @ params["in_proj"].astype(dt_)               # (B, 2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    full = jnp.concatenate([cache["conv"], xs[:, None]], axis=1)  # (B,dc,di)
+    conv_new = full[:, 1:]
+    w = params["conv_w"].astype(dt_)
+    xc = jnp.sum(full * w[None], axis=1) + params["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)
+    proj = xc @ params["x_proj"].astype(dt_)
+    dt_r, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ params["dt_proj"].astype(dt_)).astype(jnp.float32)
+        + params["dt_bias"][None])
+    A = -jnp.exp(params["A_log"])
+    Ab = jnp.exp(dt[..., None] * A[None])                      # (B,di,ds)
+    Bx = (dt * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = Ab * cache["h"] + Bx
+    y = jnp.einsum("bds,bs->bd", h, Cc.astype(jnp.float32)) + params["D"][None] * xc.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = (y @ params["out_proj"].astype(dt_))[:, None]
+    return out, {"h": h, "conv": conv_new}

@@ -1,0 +1,312 @@
+"""Top-level Model: init / loss / prefill / decode, plus Vilamb dirty events.
+
+``build_model(cfg, ctx)`` returns a Model whose pure functions are ready for
+jit/pjit. The model also reports *dirty events* — which embedding rows, MoE
+expert slabs, and KV pages a step touched — feeding the redundancy engine's
+bitvectors (paper §3.2's dirty bits, generated at the writer; DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import embed_init, make_norm
+from .parallel import ParallelCtx, NO_PARALLEL
+from . import transformer as tfm
+from . import mamba as mamba_mod
+from . import xlstm as xlstm_mod
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def cross_entropy(logits, labels, vocab_size: int):
+    """Masked CE. labels < 0 are ignored. logits: (B,S,Vpad) any float dtype.
+
+    Two memory-critical choices (DESIGN.md §7):
+      * the label score uses a one-hot einsum, NOT take_along_axis — a gather
+        along a TP-sharded vocab dim makes GSPMD replicate the full fp32
+        logits per chip (tens of GB);
+      * a custom VJP emits the (B,S,V)-sized cotangent in the *logits dtype*
+        (bf16), not fp32 — softmax-minus-onehot is exactly representable to
+        bf16 rounding and halves the largest backward buffer, and keeps the
+        LM-head weight-gradient matmul in bf16.
+    """
+    return _ce_fwd(logits, labels, vocab_size)[0]
+
+
+def _ce_parts(logits, labels, vocab_size):
+    lf = logits.astype(jnp.float32)
+    vpad = lf.shape[-1]
+    if vpad > vocab_size:  # mask padded vocab tail
+        lf = jnp.where(jnp.arange(vpad) < vocab_size, lf, -1e30)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), vpad, dtype=jnp.bfloat16)
+    ll = jnp.einsum("bsv,bsv->bs", shifted, onehot,
+                    preferred_element_type=jnp.float32)
+    nll = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, (shifted, lse, mask, denom)
+
+
+def _ce_fwd(logits, labels, vocab_size):
+    loss, (shifted, lse, mask, denom) = _ce_parts(logits, labels, vocab_size)
+    return loss, (logits, labels, lse, mask, denom)
+
+
+def _ce_bwd(vocab_size, res, g):
+    logits, labels, lse, mask, denom = res
+    lf = logits.astype(jnp.float32)
+    vpad = lf.shape[-1]
+    if vpad > vocab_size:
+        lf = jnp.where(jnp.arange(vpad) < vocab_size, lf, -1e30)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    p = jnp.exp(lf - m) / jnp.exp(lse[..., None])  # softmax from saved lse
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), vpad, dtype=jnp.float32)
+    scale = (g * mask / denom)[..., None]
+    dlogits = ((p - onehot) * scale).astype(logits.dtype)
+    return (dlogits, None)
+
+
+cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    ctx: ParallelCtx = NO_PARALLEL
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 6)
+        norm_init, _ = make_norm(cfg)
+        params: Dict[str, Any] = {
+            "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype),
+            "final_norm": norm_init(ks[1], cfg.d_model),
+            "stack": tfm.stack_init(ks[2], cfg, cfg.n_groups, dtype, cross=cfg.enc_dec),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = embed_init(ks[3], (cfg.d_model, cfg.padded_vocab), dtype)
+        if cfg.enc_dec:
+            enc_cfg = dataclasses.replace(
+                cfg, attn_every=0, ssm_kind="", n_experts=0, slstm_every=0)
+            params["enc_stack"] = tfm.stack_init(
+                ks[4], enc_cfg, enc_cfg.n_layers, dtype, cross=False)
+            params["enc_final_norm"] = norm_init(ks[5], cfg.d_model)
+        return params
+
+    # ---------------------------------------------------------------- embed
+    def _embed(self, params, tokens):
+        """Vocab-sharded embedding lookup.
+
+        A plain gather on a TP-sharded table makes GSPMD replicate the whole
+        table per chip; instead each TP rank does a masked local lookup of
+        its vocab shard and the shards combine with a psum (exact: one-hot).
+        The FSDP-sharded feature dim is all-gathered per lookup (the same
+        per-layer gather FSDP does for every weight).
+        """
+        cfg, ctx = self.cfg, self.ctx
+        dtype = jnp.dtype(cfg.param_dtype)
+        table = params["embed"]
+        tp = ctx.tp_axis
+        if (ctx.mesh is None or tp is None
+                or cfg.padded_vocab % ctx.axis_size(tp)):
+            return jnp.take(table, tokens, axis=0).astype(dtype)
+        from .parallel import shard_map
+        from jax.sharding import PartitionSpec as P
+        import numpy as _np
+        fsdp = ctx.fsdp_axis if ctx.divides(cfg.d_model, ctx.fsdp_axis) else None
+        dp = ctx.batch_spec
+        if dp is not None:
+            k = int(_np.prod([ctx.axis_size(a) for a in ctx.dp_axes]))
+            if tokens.shape[0] % max(k, 1):
+                dp = None
+        table_spec = P(tp, fsdp)
+
+        def body(tbl, tok):
+            if fsdp is not None:
+                tbl = jax.lax.all_gather(tbl, fsdp, axis=1, tiled=True)
+            vm = tbl.shape[0]
+            off = jax.lax.axis_index(tp) * vm
+            ids = tok - off
+            ok = (ids >= 0) & (ids < vm)
+            out = tbl[jnp.clip(ids, 0, vm - 1)] * ok[..., None].astype(tbl.dtype)
+            return jax.lax.psum(out, tp)
+
+        fn = shard_map(body, mesh=ctx.mesh,
+                       in_specs=(table_spec, P(dp, None)),
+                       out_specs=P(dp, None, None), check_vma=False)
+        return fn(table, tokens).astype(dtype)
+
+    def _logits(self, params, x):
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", x, params["head"])
+
+    def _encode(self, params, enc_input):
+        enc_cfg = dataclasses.replace(
+            self.cfg, attn_every=0, ssm_kind="", n_experts=0, slstm_every=0)
+        _, norm = make_norm(enc_cfg)
+        x, _, _ = tfm.stack_apply_full(
+            params["enc_stack"], enc_input.astype(jnp.dtype(self.cfg.param_dtype)),
+            enc_cfg, self.ctx, causal=False)
+        return norm(params["enc_final_norm"], x)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg, ctx = self.cfg, self.ctx
+        _, norm = make_norm(cfg)
+        memory = None
+        if cfg.enc_dec:
+            memory = self._encode(params, batch["enc_input"])
+        x = self._embed(params, batch["tokens"])
+        if cfg.frontend == "vision":
+            fe = batch["frontend"].astype(x.dtype)
+            x = jnp.concatenate([fe, x], axis=1)
+        x = ctx.constrain(x, ctx.batch_spec, None, None)
+        x, _, (counts, aux_loss) = tfm.stack_apply_full(
+            params["stack"], x, cfg, ctx, memory=memory, causal=True)
+        x = norm(params["final_norm"], x)
+        if cfg.frontend == "vision":
+            x = x[:, batch["frontend"].shape[1]:]
+        logits = self._logits(params, x)
+        logits = ctx.constrain(logits, ctx.batch_spec, None, ctx.tp_axis)
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        loss = ce + 0.01 * aux_loss
+        return loss, {"ce": ce, "aux_loss": aux_loss, "expert_counts": counts,
+                      "logits_mean": jnp.mean(jnp.abs(logits).astype(jnp.float32))}
+
+    # ---------------------------------------------------------------- caches
+    def init_caches(self, batch: int, max_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        kinds = tfm.slot_kinds(cfg)
+        G = cfg.n_groups
+        caches = {}
+        for s, (mixer, _) in enumerate(kinds):
+            if mixer == "attn":
+                shape = (G, max_len, batch, cfg.n_kv_heads, cfg.hd)
+                c = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+            elif mixer == "mamba":
+                c = {"h": jnp.zeros((G, batch, cfg.d_inner, cfg.d_state), jnp.float32),
+                     "conv": jnp.zeros((G, batch, cfg.d_conv - 1, cfg.d_inner), dtype)}
+            elif mixer == "mlstm":
+                hd = cfg.d_model // cfg.n_heads
+                c = {"C": jnp.zeros((G, batch, cfg.n_heads, hd, hd), jnp.float32),
+                     "n": jnp.zeros((G, batch, cfg.n_heads, hd), jnp.float32)}
+            else:  # slstm
+                hd = cfg.d_model // cfg.n_heads
+                c = {"c": jnp.zeros((G, batch, cfg.n_heads, hd), jnp.float32),
+                     "n": jnp.full((G, batch, cfg.n_heads), 1e-6, jnp.float32)}
+            if cfg.enc_dec:
+                eshape = (G, enc_len, batch, cfg.n_kv_heads, cfg.hd)
+                c = dict(c, ck=jnp.zeros(eshape, dtype), cv=jnp.zeros(eshape, dtype))
+            caches[f"slot_{s}"] = c
+        return caches
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, max_len: int):
+        """Full forward filling caches; returns (last_logits, caches, pos)."""
+        cfg, ctx = self.cfg, self.ctx
+        _, norm = make_norm(cfg)
+        memory = None
+        if cfg.enc_dec:
+            memory = self._encode(params, batch["enc_input"])
+        x = self._embed(params, batch["tokens"])
+        if cfg.frontend == "vision":
+            x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        x, raw_caches, _ = tfm.stack_apply_full(
+            params["stack"], x, cfg, ctx, memory=memory, causal=True,
+            collect_caches=True)
+        caches = self.init_caches(B, max_len, enc_len=memory.shape[1] if memory is not None else 0)
+        for slot, c in raw_caches.items():
+            tgt = caches[slot]
+            if "k" in c:  # (G,B,S,KV,hd) -> seq-major (G,S_max,B,KV,hd)
+                k = c["k"].transpose(0, 2, 1, 3, 4)
+                v = c["v"].transpose(0, 2, 1, 3, 4)
+                tgt["k"] = jax.lax.dynamic_update_slice_in_dim(tgt["k"], k.astype(tgt["k"].dtype), 0, axis=1)
+                tgt["v"] = jax.lax.dynamic_update_slice_in_dim(tgt["v"], v.astype(tgt["v"].dtype), 0, axis=1)
+            if "ck" in c:
+                tgt["ck"] = c["ck"].transpose(0, 2, 1, 3, 4).astype(tgt["ck"].dtype)
+                tgt["cv"] = c["cv"].transpose(0, 2, 1, 3, 4).astype(tgt["cv"].dtype)
+            for key in ("h", "conv", "C", "n", "c"):
+                if key in c:
+                    tgt[key] = c[key].astype(tgt[key].dtype)
+        x = norm(params["final_norm"], x)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, caches, S
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(self, params, caches, token, pos):
+        """One token for the whole batch. token: (B,) int32. pos: scalar."""
+        cfg, ctx = self.cfg, self.ctx
+        _, norm = make_norm(cfg)
+        x = self._embed(params, token[:, None])
+        x = ctx.constrain(x, ctx.batch_spec, None, None)
+        x, new_caches, counts = tfm.stack_apply_decode(
+            params["stack"], x, cfg, ctx, caches, pos)
+        x = norm(params["final_norm"], x)
+        logits = self._logits(params, x)[:, 0]
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, new_caches, next_token, counts
+
+    # ----------------------------------------------------- dirty events (§3.2)
+    def dirty_events_train(self, batch, aux) -> Dict[str, Any]:
+        """Domain-space dirty events for sparse leaves after a train step.
+
+        Returned dict maps param-leaf path suffixes to bool row-masks; the
+        train loop expands them to params/moments and marks everything else
+        ALL-dirty (dense AdamW updates every block).
+        """
+        cfg = self.cfg
+        events: Dict[str, Any] = {}
+        presence = jnp.zeros((cfg.padded_vocab,), bool).at[
+            batch["tokens"].reshape(-1)].set(True, mode="drop")
+        events["embed"] = presence
+        counts = aux["expert_counts"]  # (n_groups, group_size, E)
+        for s in range(cfg.group_size):
+            if cfg.ffn_kind(s) == "moe":
+                ev = counts[:, s, :] > 0  # (n_groups, E)
+                for w in ("wi", "wg", "wo"):
+                    events[f"stack/slot_{s}/moe/{w}"] = ev
+        return events
+
+    def dirty_events_decode(self, caches, pos) -> Dict[str, Any]:
+        """KV-cache page dirty events for a decode step at ``pos``.
+
+        Masks are (n_groups, S_max) over the seq-major cache leading dims —
+        only the written position's page goes dirty (paper: one page per
+        cache-line write burst). Recurrent-state caches (mamba/xlstm) are
+        rewritten wholesale each step -> ALL.
+        """
+        from repro.core.engine import ALL
+        cfg = self.cfg
+        events: Dict[str, Any] = {}
+        for s, (mixer, _) in enumerate(tfm.slot_kinds(cfg)):
+            slot = caches[f"slot_{s}"]
+            if mixer == "attn":
+                G, S_max = slot["k"].shape[0], slot["k"].shape[1]
+                ev = jnp.zeros((G, S_max), bool).at[:, pos].set(True)
+                events[f"slot_{s}/k"] = ev
+                events[f"slot_{s}/v"] = ev
+            else:
+                for w in slot:
+                    if w not in ("ck", "cv"):
+                        events[f"slot_{s}/{w}"] = ALL
+        return events
+
+
+def build_model(cfg: ModelConfig, ctx: ParallelCtx = NO_PARALLEL) -> Model:
+    return Model(cfg=cfg, ctx=ctx)

@@ -1,0 +1,212 @@
+"""Architecture assembly: decoder-only / enc-dec LMs over heterogeneous
+layer stacks (attention, Mamba, mLSTM, sLSTM mixers x dense/MoE FFNs).
+
+Layers are stacked in *groups* (the pattern period: 8 for jamba's 1:7
+attn:mamba interleave, 8 for xlstm's 7:1 mLSTM:sLSTM, 1 for uniform stacks)
+and executed with ``lax.scan`` over groups so the HLO stays one-group-sized
+regardless of depth (94-layer MoE compiles as fast as 16-layer dense).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from . import xlstm as xlstm_mod
+from .config import ModelConfig
+from .layers import embed_init, ffn_apply, ffn_init, make_norm
+from .parallel import ParallelCtx, NO_PARALLEL
+
+
+def slot_kinds(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """(mixer, ffn) kind per slot within one scan group."""
+    return [(cfg.layer_kind(s), cfg.ffn_kind(s)) for s in range(cfg.group_size)]
+
+
+# --------------------------------------------------------------------- init
+def _slot_init(key, cfg: ModelConfig, mixer: str, ffn: str, dtype, cross: bool):
+    norm_init, _ = make_norm(cfg)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"mixer_norm": norm_init(ks[0], cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = attn_mod.attn_init(ks[1], cfg, dtype)
+    elif mixer == "mamba":
+        p["mamba"] = mamba_mod.mamba_init(ks[1], cfg, dtype)
+    elif mixer == "mlstm":
+        p["mlstm"] = xlstm_mod.mlstm_init(ks[1], cfg, dtype)
+    elif mixer == "slstm":
+        p["slstm"] = xlstm_mod.slstm_init(ks[1], cfg, dtype)
+    if cross:
+        p["cross_norm"] = norm_init(ks[2], cfg.d_model)
+        p["cross"] = attn_mod.attn_init(ks[3], cfg, dtype)
+    if ffn != "none":
+        p["ffn_norm"] = norm_init(ks[4], cfg.d_model)
+        if ffn == "moe":
+            p["moe"] = moe_mod.moe_init(ks[5], cfg, dtype)
+            if cfg.dense_residual:
+                p["dense_res"] = ffn_init(ks[6], cfg, cfg.d_ff, dtype)
+        else:
+            p["ffn"] = ffn_init(ks[5], cfg, cfg.d_ff, dtype)
+    return p
+
+
+def stack_init(key, cfg: ModelConfig, n_groups: int, dtype, cross: bool = False):
+    kinds = slot_kinds(cfg)
+    out = {}
+    for s, (mixer, ffn) in enumerate(kinds):
+        gkeys = jax.random.split(jax.random.fold_in(key, s), n_groups)
+        out[f"slot_{s}"] = jax.vmap(
+            lambda k: _slot_init(k, cfg, mixer, ffn, dtype, cross))(gkeys)
+    return out
+
+
+# -------------------------------------------------------------------- apply
+def _slot_apply_full(
+    p, x, cfg, ctx, mixer: str, ffn: str,
+    memory=None, causal: bool = True,
+):
+    """Full-sequence slot (train / prefill). Returns (x, cache, counts)."""
+    _, norm = make_norm(cfg)
+    h = norm(p["mixer_norm"], x)
+    cache = None
+    shards = 1
+    if ctx.mesh is not None:
+        import numpy as _np
+        shards = int(_np.prod([ctx.axis_size(a) for a in
+                               (list(ctx.dp_axes) + ([ctx.tp_axis] if ctx.tp_axis else []))]))
+    if mixer == "attn":
+        if causal:
+            y, (k, v) = attn_mod.causal_attention(
+                p["attn"], h, cfg, tile=cfg.attn_tile, shards=shards, ctx=ctx)
+        else:
+            y, (k, v) = attn_mod.full_attention(p["attn"], h, cfg, rope=True, ctx=ctx)
+        cache = {"k": k, "v": v}  # (B,S,KV,hd); prefill converts layout
+    elif mixer == "mamba":
+        y, cache = mamba_mod.mamba_apply(p["mamba"], h, cfg, ctx)
+    elif mixer == "mlstm":
+        y, cache = xlstm_mod.mlstm_apply(p["mlstm"], h, cfg, ctx)
+    else:
+        y, cache = xlstm_mod.slstm_apply(p["slstm"], h, cfg, ctx)
+    x = x + y
+
+    if memory is not None:  # enc-dec cross attention
+        h = norm(p["cross_norm"], x)
+        y, (ck, cv) = attn_mod.full_attention(p["cross"], h, cfg, kv_x=memory,
+                                              rope=False, ctx=ctx)
+        cache = dict(cache or {}, ck=ck, cv=cv)
+        x = x + y
+
+    counts = None
+    if ffn != "none":
+        h = norm(p["ffn_norm"], x)
+        if ffn == "moe":
+            B, S, d = h.shape
+            y2, counts, aux = moe_mod.moe_apply(p["moe"], h.reshape(B * S, d), cfg, ctx)
+            y2 = y2.reshape(B, S, d)
+            if cfg.dense_residual:
+                y2 = y2 + ffn_apply(p["dense_res"], h, cfg)
+        else:
+            y2 = ffn_apply(p["ffn"], h, cfg)
+            aux = jnp.float32(0)
+        x = x + y2
+        counts = (counts, aux) if counts is not None else (jnp.zeros((max(cfg.n_experts, 1),), jnp.int32), aux)
+    else:
+        counts = (jnp.zeros((max(cfg.n_experts, 1),), jnp.int32), jnp.float32(0))
+    return x, cache, counts
+
+
+def _slot_apply_decode(p, x, cfg, ctx, mixer: str, ffn: str, cache, pos, memory_len=None):
+    """One-token slot. x: (B,1,d). Returns (x, new_cache, counts)."""
+    _, norm = make_norm(cfg)
+    h = norm(p["mixer_norm"], x)
+    if mixer == "attn":
+        y, k_c, v_c = attn_mod.decode_attention(
+            p["attn"], h, cfg, cache["k"], cache["v"], pos)
+        new_cache = dict(cache, k=k_c, v=v_c)
+    elif mixer == "mamba":
+        y, st = mamba_mod.mamba_decode_step(p["mamba"], h, cfg, cache)
+        new_cache = dict(cache, **st)
+    elif mixer == "mlstm":
+        y, st = xlstm_mod.mlstm_decode_step(p["mlstm"], h, cfg, cache)
+        new_cache = dict(cache, **st)
+    else:
+        y, st = xlstm_mod.slstm_decode_step(p["slstm"], h, cfg, cache)
+        new_cache = dict(cache, **st)
+    x = x + y
+
+    if "ck" in (cache or {}):
+        h = norm(p["cross_norm"], x)
+        y, _, _ = attn_mod.decode_attention(
+            p["cross"], h, cfg, cache["ck"], cache["cv"], pos, rope=False, cross=True)
+        x = x + y
+
+    counts = jnp.zeros((max(cfg.n_experts, 1),), jnp.int32)
+    if ffn != "none":
+        h = norm(p["ffn_norm"], x)
+        if ffn == "moe":
+            B = h.shape[0]
+            y2, counts, _ = moe_mod.moe_apply(p["moe"], h.reshape(B, -1), cfg, ctx)
+            y2 = y2.reshape(B, 1, -1)
+            if cfg.dense_residual:
+                y2 = y2 + ffn_apply(p["dense_res"], h, cfg)
+        else:
+            y2 = ffn_apply(p["ffn"], h, cfg)
+        x = x + y2
+    return x, new_cache, counts
+
+
+def stack_apply_full(
+    stack, x, cfg: ModelConfig, ctx: ParallelCtx,
+    memory=None, causal: bool = True, collect_caches: bool = False,
+):
+    """Scan the stack over groups. Returns (x, caches, (counts, aux_loss))."""
+    kinds = slot_kinds(cfg)
+
+    def group(x, gp):
+        sp = ctx.seq_spec(x.shape[1]) if cfg.seq_parallel else None
+        x = ctx.constrain(x, ctx.batch_spec, sp, None)
+        caches, counts, aux = {}, [], jnp.float32(0)
+        for s, (mixer, ffn) in enumerate(kinds):
+            # Remat at SLOT granularity: a layer's backward holds only that
+            # layer's residuals (group-level remat made an 8-layer jamba
+            # group's entire residual set live at once — 100+ GB/chip).
+            def one_slot(x_, sp, _mixer=mixer, _ffn=ffn):
+                return _slot_apply_full(
+                    sp, x_, cfg, ctx, _mixer, _ffn, memory=memory, causal=causal)
+            if cfg.remat != "none":
+                one_slot = jax.checkpoint(one_slot)
+            x, c, (cnt, a) = one_slot(x, gp[f"slot_{s}"])
+            if collect_caches and c is not None:
+                caches[f"slot_{s}"] = c
+            counts.append(cnt)
+            aux = aux + a
+        return x, (caches, jnp.stack(counts), aux)
+
+    x, (caches, counts, aux) = jax.lax.scan(
+        lambda carry, gp: group(carry, gp), x, stack,
+        unroll=True if cfg.unroll_layers else 1)
+    return x, caches, (counts, jnp.sum(aux))
+
+
+def stack_apply_decode(stack, x, cfg: ModelConfig, ctx: ParallelCtx, caches, pos):
+    kinds = slot_kinds(cfg)
+
+    def group(x, inp):
+        gp, gc = inp
+        new_c, counts = {}, []
+        for s, (mixer, ffn) in enumerate(kinds):
+            x, c, cnt = _slot_apply_decode(
+                gp[f"slot_{s}"], x, cfg, ctx, mixer, ffn, gc.get(f"slot_{s}"), pos)
+            new_c[f"slot_{s}"] = c
+            counts.append(cnt)
+        return x, (new_c, jnp.stack(counts))
+
+    x, (new_caches, counts) = jax.lax.scan(
+        group, x, (stack, caches), unroll=True if cfg.unroll_layers else 1)
+    return x, new_caches, counts

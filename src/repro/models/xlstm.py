@@ -1,0 +1,210 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM.
+
+Faithful to arXiv:2405.04517's structure (mLSTM:sLSTM at 7:1, matrix memory
+C = sum_t decay * k_t v_t^T read by queries, per-head scalar gates) with one
+documented numerics simplification: input gates use sigmoid rather than exp,
+bounding every decay/gate term in (0,1) so the chunkwise-parallel form needs
+no running max stabilizer (DESIGN.md §6). Training uses chunkwise
+parallelism (intra-chunk quadratic + inter-chunk recurrent state), decode is
+the O(1) recurrent step — the pair is validated against each other in tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .parallel import ParallelCtx, NO_PARALLEL
+
+
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], (d, d), in_axis=0, dtype=dtype),
+        "wk": dense_init(ks[1], (d, d), in_axis=0, dtype=dtype),
+        "wv": dense_init(ks[2], (d, d), in_axis=0, dtype=dtype),
+        "wi": dense_init(ks[3], (d, H), in_axis=0, dtype=jnp.float32),
+        "wf": dense_init(ks[4], (d, H), in_axis=0, dtype=jnp.float32),
+        "f_bias": jnp.full((H,), 3.0),  # open forget gates at init
+        "wo": dense_init(ks[5], (d, d), in_axis=0, dtype=dtype),
+        "wout": dense_init(ks[6], (d, d), in_axis=0, dtype=dtype),
+    }
+
+
+slstm_init = mlstm_init  # same parameter family (scalar-memory variant)
+
+
+def _heads(x, H):
+    B, S, d = x.shape
+    return x.reshape(B, S, H, d // H)
+
+
+def mlstm_apply(params, x, cfg, ctx: ParallelCtx = NO_PARALLEL, chunk: int = 256):
+    """Chunkwise-parallel mLSTM. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt_ = x.dtype
+    q = _heads(x @ params["wq"].astype(dt_), H)
+    k = _heads(x @ params["wk"].astype(dt_), H) / jnp.sqrt(float(hd)).astype(dt_)
+    v = _heads(x @ params["wv"].astype(dt_), H)
+    i = jax.nn.sigmoid((x @ params["wi"].astype(dt_)).astype(jnp.float32))   # (B,S,H)
+    f = jax.nn.sigmoid((x @ params["wf"].astype(dt_)).astype(jnp.float32)
+                       + params["f_bias"][None, None])
+    o = jax.nn.sigmoid((x @ params["wo"].astype(dt_)).astype(jnp.float32))
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    def reshape_c(t):  # (B,S,...) -> (n_chunks, B, chunk, ...)
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qs, ks_, vs = reshape_c(q), reshape_c(k), reshape_c(v)
+    is_, fs, os_ = reshape_c(i), reshape_c(f), reshape_c(o)
+
+    def step(carry, inp):
+        C0, n0 = carry                                 # (B,H,hd,hd), (B,H,hd)
+        qc, kc, vc, ic, fc, oc = inp
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        logf = jnp.log(fc + 1e-12)                     # (B,C,H) in (-inf, 0)
+        b = jnp.cumsum(logf, axis=1)                   # cumulative decay
+        # inter-chunk: read decayed carried state
+        decay_q = jnp.exp(b)                           # (B,C,H)
+        h_inter = jnp.einsum("bchd,bhde->bche", qf * decay_q[..., None], C0)
+        n_inter = jnp.einsum("bchd,bhd->bch", qf * decay_q[..., None], n0)
+        # intra-chunk: masked quadratic with relative decay
+        rel = b[:, :, None] - b[:, None, :]            # (B,Cq,Ck,H) log decay
+        gate = jnp.exp(rel) * ic[:, None]              # * input gate at source
+        causal = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+        gate = jnp.where(causal[None, :, :, None], gate, 0.0)
+        scores = jnp.einsum("bchd,bkhd->bckh", qf, kf) * gate
+        h_intra = jnp.einsum("bckh,bkhd->bchd", scores, vf)
+        n_intra = jnp.sum(scores, axis=2)          # q_t . n_t (intra part)
+        # normalizer (xLSTM: max(|n q|, 1))
+        h = h_inter + h_intra
+        n = jnp.abs(n_inter + n_intra)
+        h = h / jnp.maximum(n, 1.0)[..., None]
+        h = h.reshape(*h.shape[:2], -1) * oc      # (B,C,d) * per-channel o-gate
+        # state update: C1 = exp(b_T) C0 + sum_s exp(b_T - b_s) i_s k_s v_s^T
+        wdecay = jnp.exp(b[:, -1:, :] - b) * ic        # (B,C,H)
+        C1 = (jnp.exp(b[:, -1])[..., None, None] * C0
+              + jnp.einsum("bchd,bche->bhde", kf * wdecay[..., None], vf))
+        n1 = (jnp.exp(b[:, -1])[..., None] * n0
+              + jnp.sum(kf * wdecay[..., None], axis=1))
+        return (C1, n1), h.astype(dt_)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    step_fn = jax.checkpoint(step) if cfg.remat != "none" else step
+    (CT, nT), hs = jax.lax.scan(step_fn, (C0, n0), (qs, ks_, vs, is_, fs, os_))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d)
+    return h @ params["wout"].astype(dt_), {"C": CT, "n": nT}
+
+
+def mlstm_init_cache(cfg, batch: int):
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32)}
+
+
+def mlstm_decode_step(params, x, cfg, cache):
+    """O(1) recurrent step. x: (B,1,d)."""
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt_ = x.dtype
+    xt = x[:, 0]
+    q = (xt @ params["wq"].astype(dt_)).reshape(B, H, hd).astype(jnp.float32)
+    k = (xt @ params["wk"].astype(dt_)).reshape(B, H, hd).astype(jnp.float32) / jnp.sqrt(float(hd))
+    v = (xt @ params["wv"].astype(dt_)).reshape(B, H, hd).astype(jnp.float32)
+    i = jax.nn.sigmoid((xt @ params["wi"].astype(dt_)).astype(jnp.float32))
+    f = jax.nn.sigmoid((xt @ params["wf"].astype(dt_)).astype(jnp.float32)
+                       + params["f_bias"][None])
+    o = jax.nn.sigmoid((xt @ params["wo"].astype(dt_)).astype(jnp.float32))
+    C = f[..., None, None] * cache["C"] + i[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = f[..., None] * cache["n"] + i[..., None] * k
+    h = jnp.einsum("bhd,bhde->bhe", q, C)
+    nq = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = h / jnp.maximum(nq, 1.0)[..., None]
+    h = h.reshape(B, d) * o                       # per-channel o-gate
+    out = (h.astype(dt_) @ params["wout"].astype(dt_))[:, None]
+    return out, {"C": C, "n": n}
+
+
+# --------------------------------------------------------------------- sLSTM
+def slstm_apply(params, x, cfg, ctx: ParallelCtx = NO_PARALLEL, chunk: int = 256):
+    """Scalar-memory sLSTM: strictly sequential scan (chunked for remat)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dt_ = x.dtype
+    z = jnp.tanh((x @ params["wq"].astype(dt_)).astype(jnp.float32))  # cell input
+    i = jax.nn.sigmoid((x @ params["wi"].astype(dt_)).astype(jnp.float32))
+    f = jax.nn.sigmoid((x @ params["wf"].astype(dt_)).astype(jnp.float32)
+                       + params["f_bias"][None, None])
+    o = jax.nn.sigmoid((x @ params["wo"].astype(dt_)).astype(jnp.float32))
+    hd = d // H
+    zh = z.reshape(B, S, H, hd)
+
+    def cell(carry, inp):
+        c0, n0 = carry                                  # (B,H,hd), (B,H)
+        zt, it, ft = inp
+        c1 = ft[..., None] * c0 + it[..., None] * zt
+        n1 = ft * n0 + it
+        return (c1, n1), (c1, n1)
+
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+
+    def chunk_step(carry, inp):
+        zc, ic, fc = inp                                # (B,chunk,...)
+        (c1, n1), (cs, ns) = jax.lax.scan(
+            cell, carry,
+            (zc.transpose(1, 0, 2, 3), ic.transpose(1, 0, 2), fc.transpose(1, 0, 2)))
+        return (c1, n1), (cs, ns)
+
+    def reshape_c(t):
+        return t.reshape(B, n_chunks, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    c0 = jnp.zeros((B, H, hd), jnp.float32)
+    n0 = jnp.full((B, H), 1e-6, jnp.float32)
+    step_fn = jax.checkpoint(chunk_step) if cfg.remat != "none" else chunk_step
+    (cT, nT), (cs, ns) = jax.lax.scan(
+        step_fn, (c0, n0),
+        (reshape_c(zh), reshape_c(i.reshape(B, S, H)), reshape_c(f.reshape(B, S, H))))
+    # cs: (n_chunks, chunk, B, H, hd) -> (B, S, H, hd)
+    cs = cs.reshape(n_chunks * chunk, B, H, hd).transpose(1, 0, 2, 3)
+    ns = ns.reshape(n_chunks * chunk, B, H).transpose(1, 0, 2)
+    h = cs / jnp.maximum(jnp.abs(ns), 1.0)[..., None]
+    h = h.reshape(B, S, d) * o
+    return (h.astype(dt_)) @ params["wout"].astype(dt_), {"c": cT, "n": nT}
+
+
+def slstm_init_cache(cfg, batch: int):
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {"c": jnp.zeros((batch, H, hd), jnp.float32),
+            "n": jnp.full((batch, H), 1e-6, jnp.float32)}
+
+
+def slstm_decode_step(params, x, cfg, cache):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    dt_ = x.dtype
+    xt = x[:, 0]
+    z = jnp.tanh((xt @ params["wq"].astype(dt_)).astype(jnp.float32)).reshape(B, H, hd)
+    i = jax.nn.sigmoid((xt @ params["wi"].astype(dt_)).astype(jnp.float32))
+    f = jax.nn.sigmoid((xt @ params["wf"].astype(dt_)).astype(jnp.float32)
+                       + params["f_bias"][None])
+    o = jax.nn.sigmoid((xt @ params["wo"].astype(dt_)).astype(jnp.float32))
+    c = f[..., None] * cache["c"] + i[..., None] * z
+    n = f * cache["n"] + i
+    h = c / jnp.maximum(jnp.abs(n), 1.0)[..., None]
+    h = (h.reshape(B, d) * o).astype(dt_)
+    out = (h @ params["wout"].astype(dt_))[:, None]
+    return out, {"c": c, "n": n}

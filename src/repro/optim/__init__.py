@@ -1,0 +1,2 @@
+from .adamw import AdamW
+from .schedule import warmup_cosine

@@ -1,0 +1,1 @@
+from .serve_loop import Server, make_decode_step, make_prefill

@@ -1,0 +1,90 @@
+"""Serving loop: batched prefill + decode with Vilamb-protected KV caches.
+
+In serving, params are immutable (redundancy computed once at load); the
+*KV cache* is the hot, sparsely-written state — each decode step dirties one
+page per layer, the closest analogue of the paper's cache-line writes to DAX
+pages. Recurrent-state caches (mamba/xlstm) rewrite wholesale and are marked
+ALL-dirty.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import flatten_dict, unflatten_dict
+from repro.core import policy
+from repro.core.engine import ALL, RedundancyEngine
+
+
+def make_prefill(model, max_len: int) -> Callable:
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill
+
+
+def make_decode_step(model, engine: Optional[RedundancyEngine] = None,
+                     mode: str = "none") -> Callable:
+    """decode_step(params, caches, red, token, pos) -> (logits, caches, red, next)."""
+
+    def decode_step(params, caches, red, token, pos):
+        logits, new_caches, next_token, _ = model.decode_step(params, caches, token, pos)
+        if engine is not None:
+            events = model.dirty_events_decode(new_caches, pos)
+            if mode == "vilamb":
+                red = engine.mark_dirty(red, events)
+            elif mode == "sync":
+                old = flatten_dict(caches)
+                new = flatten_dict(new_caches)
+                red = engine.sync_update(old, new, red)
+        return logits, new_caches, red, next_token
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Server:
+    model: Any
+    engine: Optional[RedundancyEngine] = None
+    mode: str = "none"
+    period_steps: int = 64
+    max_len: int = 2048
+
+    def __post_init__(self):
+        self.prefill = jax.jit(make_prefill(self.model, self.max_len))
+        self.decode = jax.jit(
+            make_decode_step(self.model, self.engine, self.mode),
+            donate_argnums=(1, 2))
+        if self.engine is not None:
+            self._red_step = jax.jit(
+                lambda caches, red: self.engine.redundancy_step(flatten_dict(caches), red),
+                donate_argnums=(1,))
+            self._scrub = jax.jit(
+                lambda caches, red: self.engine.scrub(flatten_dict(caches), red))
+
+    def init_redundancy(self, caches):
+        if self.engine is None:
+            return {}
+        return self.engine.init(flatten_dict(caches))
+
+    def generate(self, params, batch, n_tokens: int,
+                 scrub_every: int = 0) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Prefill then decode n_tokens greedily; returns (tokens, stats)."""
+        logits, caches, pos = self.prefill(params, batch)
+        red = self.init_redundancy(caches)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [token]
+        mismatches = 0
+        for t in range(n_tokens - 1):
+            logits, caches, red, token = self.decode(params, caches, red, token, pos + t)
+            out.append(token)
+            if (self.engine is not None and self.mode == "vilamb"
+                    and policy.should_update(t + 1, self.period_steps)):
+                red = self._red_step(caches, red)
+            if self.engine is not None and scrub_every and (t + 1) % scrub_every == 0:
+                mm = self._scrub(caches, red)
+                mismatches += int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
+        return jnp.stack(out, axis=1), {"mismatches": mismatches, "red": red,
+                                        "caches": caches, "pos": pos + n_tokens - 1}

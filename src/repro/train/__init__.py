@@ -1,0 +1,2 @@
+from .state import TrainState, protected_leaves, protected_structs
+from .train_loop import make_train_step, make_redundancy_step, Trainer

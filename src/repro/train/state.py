@@ -1,0 +1,46 @@
+"""Training state + the protected-leaf view the redundancy engine covers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import flatten_dict
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    red: Any          # RedundancyState (flat path -> LeafRedundancy), may be {}
+    step: jax.Array
+
+    @staticmethod
+    def create(params, opt_state, red=None):
+        return TrainState(params=params, opt=opt_state, red=red or {},
+                          step=jnp.zeros((), jnp.int32))
+
+
+def protected_leaves(params, opt_state) -> Dict[str, jax.Array]:
+    """The long-lived HBM state Vilamb covers: params + Adam moments.
+
+    (The scalar step/count are excluded — they are checkpoint metadata.)
+    """
+    out = {}
+    for k, v in flatten_dict(params).items():
+        out[f"params/{k}"] = v
+    for k, v in flatten_dict(opt_state["m"]).items():
+        out[f"m/{k}"] = v
+    for k, v in flatten_dict(opt_state["v"]).items():
+        out[f"v/{k}"] = v
+    return out
+
+
+def protected_structs(params, opt_state) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+        for k, v in protected_leaves(params, opt_state).items()
+    }

@@ -1,0 +1,195 @@
+"""Train-step factories with the three redundancy modes + the host Trainer.
+
+Modes (paper Table 1):
+  none   — No-Redundancy baseline.
+  sync   — Pangolin analogue: diff-based checksum+parity inside the step.
+  vilamb — dirty marking inside the step; Algorithm 1 runs every K steps as
+           a separate jitted ``redundancy_step`` (async dispatch lets it
+           pipeline behind subsequent train steps on a real TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import flatten_dict
+from repro.core import policy
+from repro.core.engine import ALL, RedundancyEngine
+from repro.optim.adamw import AdamW
+from .state import TrainState, protected_leaves
+
+
+def expand_events(engine: RedundancyEngine, sparse_events: Mapping[str, Any]):
+    """Suffix events -> full engine-leaf events; everything else ALL-dirty."""
+    events: Dict[str, Any] = {}
+    for name in engine.metas:
+        root, _, suffix = name.partition("/")
+        ev = sparse_events.get(suffix)
+        events[name] = ev if ev is not None else ALL
+    return events
+
+
+def make_train_step(model, opt: AdamW, engine: Optional[RedundancyEngine],
+                    mode: str = "none", accum_steps: int = 1) -> Callable:
+    """accum_steps > 1 microbatches the global batch (gradient accumulation):
+    activation memory scales down by the accumulation factor; gradients
+    accumulate in fp32 across microbatches inside one jitted step."""
+    assert mode in ("none", "sync", "vilamb")
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+        mb = jax.tree.map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                *x.shape[1:]), batch)
+
+        def mb_step(carry, microbatch):
+            gacc, loss_acc, aux_acc = carry
+            (loss, aux), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, microbatch)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            aux_acc = {
+                "ce": aux_acc["ce"] + aux["ce"],
+                "aux_loss": aux_acc["aux_loss"] + aux["aux_loss"],
+                "expert_counts": aux_acc["expert_counts"] + aux["expert_counts"],
+                "logits_mean": aux_acc["logits_mean"] + aux["logits_mean"],
+            }
+            return (gacc, loss_acc + loss, aux_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        aux0 = {"ce": jnp.float32(0), "aux_loss": jnp.float32(0),
+                "expert_counts": jnp.zeros(
+                    (model.cfg.n_groups, model.cfg.group_size,
+                     max(model.cfg.n_experts, 1)), jnp.int32),
+                "logits_mean": jnp.float32(0)}
+        (gacc, loss_sum, aux_sum), _ = jax.lax.scan(
+            mb_step, (g0, jnp.float32(0), aux0), mb,
+            unroll=True if model.cfg.unroll_layers else 1)
+        n = float(accum_steps)
+        grads = jax.tree.map(lambda g: g / n, gacc)
+        aux = {k: (v / n if k != "expert_counts" else v) for k, v in aux_sum.items()}
+        return (loss_sum / n, aux), grads
+
+    def train_step(state: TrainState, batch):
+        (loss, aux), grads = grads_of(state.params, batch)
+        if getattr(model.cfg, "opt_grad_barrier", False):
+            # Keep the data-parallel gradient reduction on a bf16 wire: the
+            # barrier stops XLA hoisting AdamW's f32 converts above the
+            # all-reduce/reduce-scatter (§Perf).
+            grads = jax.lax.optimization_barrier(grads)
+        sparse_events = model.dirty_events_train(batch, aux)
+        row_masks = {k: v for k, v in sparse_events.items()
+                     if not isinstance(v, str)}
+        new_params, new_opt, gnorm = opt.update(
+            grads, state.opt, state.params, row_masks)
+        red = state.red
+        if engine is not None and mode == "sync":
+            old = protected_leaves(state.params, state.opt)
+            new = protected_leaves(new_params, new_opt)
+            red = engine.sync_update(old, new, red)
+        elif engine is not None and mode == "vilamb":
+            red = engine.mark_dirty(red, expand_events(engine, sparse_events))
+        metrics = {"loss": loss, "ce": aux["ce"], "grad_norm": gnorm,
+                   "aux_loss": aux["aux_loss"]}
+        return TrainState(new_params, new_opt, red, state.step + 1), metrics
+
+    return train_step
+
+
+def make_redundancy_step(engine: RedundancyEngine) -> Callable:
+    """Algorithm 1 over the protected state (the paper's background thread)."""
+    def redundancy_step(state: TrainState) -> TrainState:
+        leaves = protected_leaves(state.params, state.opt)
+        red = engine.redundancy_step(leaves, state.red)
+        return dataclasses.replace(state, red=red)
+    return redundancy_step
+
+
+def make_scrub(engine: RedundancyEngine) -> Callable:
+    def scrub(state: TrainState):
+        leaves = protected_leaves(state.params, state.opt)
+        return engine.scrub(leaves, state.red)
+    return scrub
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Host-side loop: periodic redundancy, scrubbing w/ double-check,
+    preemption flush, straggler watchdog."""
+    model: Any
+    opt: AdamW
+    engine: Optional[RedundancyEngine] = None
+    mode: str = "none"
+    period_steps: int = 8
+    scrub_period_steps: int = 0
+    donate: bool = True
+
+    def __post_init__(self):
+        donate = (0,) if self.donate else ()
+        self.train_step = jax.jit(
+            make_train_step(self.model, self.opt, self.engine, self.mode),
+            donate_argnums=donate)
+        self.redundancy_step = (
+            jax.jit(make_redundancy_step(self.engine), donate_argnums=donate)
+            if self.engine is not None else None)
+        self.scrub_fn = (jax.jit(make_scrub(self.engine))
+                         if self.engine is not None else None)
+        self.step_times: list = []
+        self.corruption_alarms: int = 0
+
+    def init_state(self, key) -> TrainState:
+        params = self.model.init(key)
+        opt_state = self.opt.init(params)
+        red = {}
+        if self.engine is not None:
+            red = self.engine.init(protected_leaves(params, opt_state))
+        return TrainState.create(params, opt_state, red)
+
+    def scrub_check(self, state: TrainState) -> int:
+        """Scrub with the paper's double-check: on mismatch, re-verify after
+        quiescing in-flight work (block_until_ready) before raising."""
+        mm = self.scrub_fn(state)
+        total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
+        if total:
+            jax.block_until_ready(state.params)
+            mm2 = self.scrub_fn(state)           # second check (paper §3.4)
+            total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm2)))
+            if total:
+                self.corruption_alarms += 1
+        return total
+
+    def flush(self, state: TrainState) -> TrainState:
+        """Battery/preemption flush: force Algorithm 1 now (paper §3.3)."""
+        if self.redundancy_step is None:
+            return state
+        return self.redundancy_step(state)
+
+    def run(self, state: TrainState, data, steps: int,
+            log_every: int = 10, on_step=None) -> TrainState:
+        for i in range(steps):
+            t0 = time.perf_counter()
+            batch = data.get(int(state.step))
+            state, metrics = self.train_step(state, batch)
+            if (self.mode == "vilamb" and self.redundancy_step is not None
+                    and policy.should_update(int(state.step), self.period_steps)):
+                state = self.redundancy_step(state)
+            if (self.scrub_fn is not None and self.scrub_period_steps
+                    and policy.should_scrub(int(state.step), self.scrub_period_steps)):
+                self.scrub_check(state)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            # Straggler watchdog: under sustained slowdown, defer redundancy
+            # (stretch the period) rather than stall the step (paper's knob).
+            if len(self.step_times) > 20:
+                med = sorted(self.step_times[-20:])[10]
+                if dt > 3 * med and self.period_steps:
+                    self.period_steps = min(self.period_steps * 2, 4096)
+            if on_step is not None:
+                on_step(state, metrics)
+        return state

@@ -1,0 +1,43 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets its own flags in a
+# subprocess); keep heavy compile knobs off.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_batch(cfg, B=2, S=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    b = {}
+    S_txt = S
+    if cfg.frontend == "vision":
+        S_txt = S - cfg.frontend_len
+        b["frontend"] = jax.random.normal(ks[2], (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        b["enc_input"] = jax.random.normal(ks[3], (B, S // 2, cfg.d_model), jnp.float32)
+        S_txt = S // 2
+    b["tokens"] = jax.random.randint(ks[0], (B, S_txt), 0, cfg.vocab_size, jnp.int32)
+    b["labels"] = jax.random.randint(ks[1], (B, S_txt), 0, cfg.vocab_size, jnp.int32)
+    return b
+
+
+def fp32_exact(cfg):
+    """fp32 + no-drop MoE capacity: paths must agree bit-tightly."""
+    kw = {"param_dtype": "float32"}
+    if cfg.n_experts:
+        kw["capacity_factor"] = float(cfg.n_experts)
+    return dataclasses.replace(cfg, **kw)

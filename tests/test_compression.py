@@ -1,0 +1,33 @@
+"""Gradient compression: quantization roundtrip + error feedback contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.compression import BLOCK, _dequantize, _quantize
+
+
+def test_quantize_roundtrip_bounded_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4 * BLOCK,)) * 3.0
+    q, s = _quantize(x)
+    back = _dequantize(q, s)
+    err = np.abs(np.asarray(back - x))
+    # per-block max error <= scale/2 = max|x|/254
+    bounds = np.repeat(np.asarray(s).ravel() / 2 + 1e-7, BLOCK)
+    assert (err <= bounds).all()
+
+
+def test_error_feedback_accumulates_to_exact():
+    """Sum over steps of (sent + error_t - error_{t-1}) == sum of inputs:
+    EF guarantees no gradient mass is lost over time."""
+    key = jax.random.PRNGKey(1)
+    xs = jax.random.normal(key, (10, 2 * BLOCK)) * 0.1
+    err = jnp.zeros((2 * BLOCK,))
+    sent_total = jnp.zeros((2 * BLOCK,))
+    for t in range(10):
+        flat = xs[t] + err
+        q, s = _quantize(flat)
+        sent = _dequantize(q, s)
+        err = flat - sent
+        sent_total = sent_total + sent
+    np.testing.assert_allclose(
+        np.asarray(sent_total + err), np.asarray(xs.sum(0)), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,56 @@
+"""Collective parser + roofline math unit tests."""
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+HLO = """
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[8,128]{1,0} all-reduce(%p0), replica_groups=[32,8]<=[256]T(1,0), to_apply=%add
+  %rs = bf16[4,128]{1,0} reduce-scatter(%x), replica_groups={{0,1}}, dimensions={0}
+  %aa = f32[8,128]{1,0} all-to-all(%p0), replica_groups={{0,1,2,3}}
+  %cp = u32[16]{0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %tup = (f32[8,128]{1,0}, f32[8]{0}) all-reduce(%p0, %p1), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+
+
+def test_parse_collectives():
+    st = H.parse_collectives(HLO)
+    assert st.per_op_count == {"all-gather": 1, "all-reduce": 2,
+                               "reduce-scatter": 1, "all-to-all": 1,
+                               "collective-permute": 1}
+    ag = 64 * 128 * 4 * 7 / 8
+    ar = 2 * 8 * 128 * 4 * 7 / 8
+    ar2 = 2 * (8 * 128 * 4 + 8 * 4) * 3 / 4
+    rs = 4 * 128 * 2 * 1
+    aa = 8 * 128 * 4 * 3 / 4
+    cp = 16 * 4
+    assert st.per_op["all-gather"] == pytest.approx(ag)
+    assert st.per_op["all-reduce"] == pytest.approx(ar + ar2)
+    assert st.per_op["reduce-scatter"] == pytest.approx(rs)
+    assert st.per_op["all-to-all"] == pytest.approx(aa)
+    assert st.per_op["collective-permute"] == pytest.approx(cp)
+
+
+def test_group_size_forms():
+    assert H._group_size("replica_groups={{0,1,2,3}}") == 4
+    assert H._group_size("replica_groups=[32,8]<=[256]") == 8
+    assert H._group_size("no groups here") == 1
+
+
+def test_roofline_terms():
+    rl = H.roofline_terms(
+        flops_per_chip=197e12, bytes_per_chip=819e9,
+        coll_bytes_per_chip=25e9, chips=10, model_flops=197e12 * 10)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(1.0)
+    assert rl.collective_s == pytest.approx(0.5)
+    assert rl.bottleneck in ("compute", "memory")
+    assert rl.useful_ratio == pytest.approx(1.0)
+    assert rl.roofline_fraction == pytest.approx(1.0)
+
+
+def test_shape_bytes_tuple():
+    assert H._shape_bytes("(f32[2,2]{1,0}, bf16[4]{0})") == 16 + 8
+    assert H._shape_bytes("pred[7]") == 7

@@ -1,0 +1,66 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.checksum import ops as cops
+from repro.kernels.checksum import ref as cref
+from repro.kernels.parity import ops as pops
+from repro.kernels.parity import ref as pref
+from repro.kernels.redundancy import ops as rops
+from repro.kernels.redundancy import ref as rref
+
+
+def _lanes(seed, nb, L):
+    return jax.random.randint(jax.random.PRNGKey(seed), (nb, L), 0, 2**31 - 1, jnp.uint32)
+
+
+@pytest.mark.parametrize("nb,L", [(1, 128), (3, 128), (13, 512), (8, 1024), (5, 4096 * 2)])
+def test_checksum_kernel_shapes(nb, L):
+    lanes = _lanes(0, nb, L)
+    k = cops.block_checksums(lanes, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(cref.block_checksums(lanes)))
+
+
+@pytest.mark.parametrize("nb,L,sw", [(1, 128, 4), (9, 256, 2), (13, 512, 4),
+                                     (10, 128, 5), (16, 8192, 4)])
+def test_parity_kernel_shapes(nb, L, sw):
+    lanes = _lanes(1, nb, L)
+    k = pops.stripe_parity(lanes, stripe_width=sw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(pref.stripe_parity(lanes, sw)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100), st.integers(1, 14), st.sampled_from([128, 256]),
+       st.sampled_from([2, 4]), st.data())
+def test_fused_kernel_property(seed, nb, L, sw, data):
+    lanes = _lanes(seed, nb, L)
+    bd = np.array(data.draw(st.lists(st.booleans(), min_size=nb, max_size=nb)))
+    ns = -(-nb // sw)
+    pad = np.zeros(ns * sw, bool)
+    pad[:nb] = bd
+    sd = pad.reshape(ns, sw).any(axis=1)
+    old_cks = cref.block_checksums(lanes) ^ jnp.uint32(99)
+    old_par = pref.stripe_parity(lanes, sw) ^ jnp.uint32(7)
+    ck_k, pr_k = rops.fused_update(lanes, old_cks, old_par, jnp.asarray(bd),
+                                   jnp.asarray(sd), sw, use_pallas=True, interpret=True)
+    ck_r, pr_r = rref.fused_update(lanes, old_cks, old_par, jnp.asarray(bd),
+                                   jnp.asarray(sd), sw)
+    np.testing.assert_array_equal(np.asarray(ck_k), np.asarray(ck_r))
+    np.testing.assert_array_equal(np.asarray(pr_k), np.asarray(pr_r))
+
+
+def test_fused_kernel_work_queue_semantics():
+    """Clean stripes' outputs must be byte-identical to old values even when
+    the kernel never visits them (the work-queue skip, DESIGN.md kernels)."""
+    lanes = _lanes(5, 12, 256)
+    old_cks = jnp.arange(12, dtype=jnp.uint32) * 7
+    old_par = jnp.full((3, 256), 0xABC, jnp.uint32)
+    bd = jnp.zeros(12, bool)  # nothing dirty
+    sd = jnp.zeros(3, bool)
+    cks, par = rops.fused_update(lanes, old_cks, old_par, bd, sd, 4,
+                                 use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(cks), np.asarray(old_cks))
+    np.testing.assert_array_equal(np.asarray(par), np.asarray(old_par))

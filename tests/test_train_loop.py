@@ -1,0 +1,97 @@
+"""Train loop in all three redundancy modes: observational equivalence,
+Algorithm-1 scheduling, accumulation equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import RedundancyConfig, RedundancyEngine
+from repro.data import SyntheticPipeline
+from repro.models import build_model
+from repro.models.config import ShapeConfig
+from repro.optim import AdamW, warmup_cosine
+from repro.train import Trainer, protected_structs
+from repro.train.train_loop import make_train_step
+
+
+def _setup(arch="llama3.2-3b", mode="vilamb", period=4):
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    opt = AdamW(lr=warmup_cosine(3e-3, 5, 100))
+    engine = None
+    if mode != "none":
+        p0 = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        o0 = jax.eval_shape(opt.init, p0)
+        engine = RedundancyEngine(
+            protected_structs(p0, o0),
+            RedundancyConfig(mode=mode, period_steps=period, lanes_per_block=512))
+    tr = Trainer(model=m, opt=opt, engine=engine, mode=mode,
+                 period_steps=period, scrub_period_steps=5)
+    data = SyntheticPipeline(cfg, ShapeConfig("t", 64, 4, "train"), seed=0)
+    return cfg, tr, data
+
+
+@pytest.mark.parametrize("mode", ["none", "vilamb", "sync"])
+def test_modes_train_identically(mode):
+    """Redundancy is observational: losses must match No-Redundancy exactly."""
+    cfg, tr, data = _setup(mode=mode)
+    st = tr.init_state(jax.random.PRNGKey(0))
+    losses = []
+    st = tr.run(st, data, 8, on_step=lambda s, m: losses.append(float(m["loss"])))
+    assert losses[-1] < losses[0]
+    assert tr.corruption_alarms == 0
+    if mode != "none":
+        st = tr.flush(st)
+        mm = tr.scrub_fn(st)
+        assert sum(int(v.sum()) for v in jax.tree.leaves(mm)) == 0
+
+
+def test_mode_losses_equal():
+    results = {}
+    for mode in ("none", "vilamb", "sync"):
+        _, tr, data = _setup(mode=mode)
+        st = tr.init_state(jax.random.PRNGKey(0))
+        losses = []
+        st = tr.run(st, data, 5, on_step=lambda s, m: losses.append(float(m["loss"])))
+        results[mode] = losses
+    np.testing.assert_allclose(results["none"], results["vilamb"], rtol=0, atol=0)
+    np.testing.assert_allclose(results["none"], results["sync"], rtol=0, atol=0)
+
+
+def test_grad_accumulation_equivalent():
+    cfg = dataclasses.replace(get_smoke("olmo-1b"), param_dtype="float32")
+    m = build_model(cfg)
+    opt = AdamW(lr=lambda s: 1e-3)
+    data = SyntheticPipeline(cfg, ShapeConfig("t", 32, 8, "train"), seed=1)
+    batch = data.get(0)
+    params = m.init(jax.random.PRNGKey(0))
+    from repro.train.state import TrainState
+    st = TrainState.create(params, opt.init(params))
+    s1 = make_train_step(m, opt, None, "none", accum_steps=1)
+    s4 = make_train_step(m, opt, None, "none", accum_steps=4)
+    st1, m1 = jax.jit(s1)(st, batch)
+    st4, m4 = jax.jit(s4)(st, batch)
+    # same data, same total gradient: loss and grad norm agree; params agree
+    # to Adam's first-step scale (lr) — near-zero grads flip sign freely
+    # between accumulation orders, so atol is in units of lr.
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(float(m1["grad_norm"]), float(m4["grad_norm"]), rtol=1e-3)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st4.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2.1e-3)
+
+
+def test_vilamb_amortization_counter():
+    """Dirty bits accumulate across steps and clear at the period boundary."""
+    from repro.core import bits
+    cfg, tr, data = _setup(mode="vilamb", period=100)  # loop won't trigger it
+    st = tr.init_state(jax.random.PRNGKey(0))
+    st = tr.run(st, data, 3)
+    dirty_total = sum(int(bits.popcount(r.dirty)) for r in st.red.values())
+    assert dirty_total > 0  # marked, not yet flushed
+    st = tr.flush(st)
+    dirty_total = sum(int(bits.popcount(r.dirty)) for r in st.red.values())
+    assert dirty_total == 0
