@@ -1,10 +1,13 @@
 """Benchmark substrate: a DAX-NVM-region analogue with 4 KB pages.
 
 A "heap" of ``n_rows`` rows of 1024 fp32 elements — each row is exactly one
-4 KiB block (the paper's page size; lanes_per_block=1024) — protected by the
-three redundancy options. Insert/overwrite/remove/read ops mirror the
-paper's PMDK/fio workloads; Pangolin-mode (sync) updates cost O(touched
-rows) via the diff identities, Vilamb amortizes over the update period.
+4 KiB block (the paper's page size; lanes_per_block=1024) — protected by a
+:class:`repro.core.ProtectedStore`.  The store owns the redundancy
+lifecycle: ``on_write`` records each write batch (dirty marks for vilamb,
+the sparse row-diff for sync/Pangolin), ``tick`` applies the periodic
+Algorithm-1 schedule.  Insert/overwrite/remove/read ops mirror the paper's
+PMDK/fio workloads; sync costs O(touched rows) via the diff identities,
+Vilamb amortizes over the update period.
 
 Relative throughputs reproduce the paper's claims; absolute numbers are CPU.
 """
@@ -21,9 +24,7 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import (ALL, RedundancyConfig, RedundancyEngine,
-                        block_checksums, checksum_diff, parity_diff)
-from repro.core import bits, blocks as B
+from repro.core import ProtectedStore, RedundancyPolicy
 
 ROW_ELEMS = 1024          # 4 KiB fp32 rows == paper pages
 LANES_PER_BLOCK = 1024    # one block per row
@@ -38,84 +39,57 @@ class Region:
 
     def __post_init__(self):
         self.heap = jnp.zeros((self.n_rows, ROW_ELEMS), jnp.float32)
-        cfg = RedundancyConfig(mode=self.mode if self.mode != "none" else "vilamb",
-                               lanes_per_block=LANES_PER_BLOCK,
-                               stripe_data_blocks=STRIPE)
-        self.engine = RedundancyEngine(
-            {"heap": jax.ShapeDtypeStruct(self.heap.shape, self.heap.dtype)}, cfg)
-        self.red = self.engine.init({"heap": self.heap}) if self.mode != "none" else None
-        self.meta = self.engine.metas["heap"]
+        policy = RedundancyPolicy.single(
+            self.mode, period_steps=self.period,
+            lanes_per_block=LANES_PER_BLOCK, stripe_data_blocks=STRIPE)
+        self.store = ProtectedStore(policy).attach({"heap": self.heap})
+        self.red = self.store.init({"heap": self.heap})
+        self.meta = self.store.metas["heap"]
+        # Back-compat surface for sibling benchmark modules.
+        self.engine = self.store.engine_for("heap")
         self._build()
 
     def _build(self):
-        mode = self.mode
-        engine, meta = self.engine, self.meta
+        store = self.store
+        n_rows = self.n_rows
 
-        def write_none(heap, red, rows, vals):
-            return heap.at[rows].set(vals), red
-
-        def write_vilamb(heap, red, rows, vals):
+        def write(heap, red, rows, vals):
+            old = heap[rows]
             heap = heap.at[rows].set(vals)
-            mask = jnp.zeros((self.n_rows,), bool).at[rows].set(True)
-            red = engine.mark_dirty(red, {"heap": mask})
+            mask = jnp.zeros((n_rows,), bool).at[rows].set(True)
+            red = store.on_write(red, events={"heap": mask},
+                                 row_diffs={"heap": (rows, old, vals)})
             return heap, red
 
-        def write_sync(heap, red, rows, vals):
-            """Pangolin: per-object diff update inline (touched rows only)."""
-            old_rows = heap[rows]
-            heap = heap.at[rows].set(vals)
-            old_lanes = jax.lax.bitcast_convert_type(old_rows, jnp.uint32)
-            new_lanes = jax.lax.bitcast_convert_type(vals, jnp.uint32)
-            r = red["heap"]
-            # rows == blocks: per-row checksum diff with the row's block salt
-            bids = rows.astype(jnp.uint32)
-            lids = jnp.arange(ROW_ELEMS, dtype=jnp.uint32)[None, :]
-            from repro.core.checksum import fmix32, lane_salt
-            salt = lane_salt(bids[:, None], lids)
-            dck = jax.lax.reduce(
-                fmix32(old_lanes ^ salt) ^ fmix32(new_lanes ^ salt),
-                jnp.uint32(0), jax.lax.bitwise_xor, (1,))
-            cks = r.checksums.at[rows].set(r.checksums[rows] ^ dck)
-            delta = old_lanes ^ new_lanes
-            sid = rows // STRIPE
-            par = r.parity.at[sid].set(r.parity[sid] ^ delta)
-            red = dict(red)
-            import dataclasses as dc
-            from repro.core.checksum import meta_checksum
-            red["heap"] = dc.replace(r, checksums=cks, parity=par,
-                                     meta_ck=meta_checksum(cks))
-            return heap, red
-
-        write = {"none": write_none, "vilamb": write_vilamb, "sync": write_sync}[mode]
         self.write = jax.jit(write, donate_argnums=(0, 1))
         self.read = jax.jit(lambda heap, rows: heap[rows])
-        if self.mode != "none":
+        if store.protects:
             self.red_step = jax.jit(
-                lambda heap, red: engine.redundancy_step({"heap": heap}, red),
+                lambda heap, red: store.redundancy_step({"heap": heap}, red),
                 donate_argnums=(1,))
 
     def run_writes(self, key_batches, vals) -> float:
-        """Timed loop; returns wall seconds. Applies Vilamb periodicity."""
+        """Timed loop; returns wall seconds. The store's tick applies the
+        Vilamb periodicity (no-op for sync/none policies)."""
         heap, red = self.heap, self.red
-        # warmup compile
+        # warmup compile (write step + the periodic pass)
         heap, red = self.write(heap, red, key_batches[0], vals)
-        if self.mode == "vilamb":
-            red = self.red_step(heap, red)
+        if self.store.has_periodic:
+            red = self.store.flush({"heap": heap}, red)
         jax.block_until_ready(heap)
         t0 = time.perf_counter()
         for i, rows in enumerate(key_batches[1:], 1):
             heap, red = self.write(heap, red, rows, vals)
-            if self.mode == "vilamb" and i % self.period == 0:
-                red = self.red_step(heap, red)
+            red, _ = self.store.tick({"heap": heap}, red, i)
         jax.block_until_ready(heap)
         dt = time.perf_counter() - t0
         self.heap, self.red = heap, red
         return dt
 
     def vulnerable_stripes(self) -> int:
-        if self.red is None:
+        if not self.red:
             return 0
-        return int(self.engine.dirty_stats(self.red)["heap"]["vulnerable_stripes"])
+        return int(self.store.dirty_stats(self.red)["heap"]["vulnerable_stripes"])
 
 
 def key_stream(pattern: str, steps: int, batch: int, n_rows: int, seed: int = 0):

@@ -1,5 +1,12 @@
 """Quickstart: protect any JAX state dict with Vilamb in ~20 lines.
 
+One facade owns the whole redundancy lifecycle:
+
+    store = ProtectedStore(policy).attach(state)   # what / how to protect
+    red   = store.init(state)                      # full pass at creation
+    red   = store.on_write(red, events=...)        # inside each write step
+    red, _ = store.tick(state, red, step)          # once per host step
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys
@@ -9,36 +16,53 @@ sys.path.insert(0, "src")
 import jax
 import jax.numpy as jnp
 
-from repro.core import ALL, RedundancyConfig, RedundancyEngine
+from repro.core import LeafPolicy, ProtectedStore, RedundancyPolicy
 from repro.core import blocks as B
 
-# 1) Any pytree of arrays is protectable state (here: a toy KV heap).
-state = {"heap": jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))}
+# 1) Any pytree of arrays is protectable state (here: a hot KV heap plus a
+#    cold param blob). Policies are declarative and PER LEAF: the heap runs
+#    the paper's asynchronous mode with period T=8 and a freshness deadline
+#    (the paper's tunable knob: at most 16 steps of vulnerability, however
+#    the governor stretches the period); params use the sync (Pangolin) mode.
+state = {"heap": jax.random.normal(jax.random.PRNGKey(0), (1024, 1024)),
+         "params": jax.random.normal(jax.random.PRNGKey(1), (512, 512))}
+policy = RedundancyPolicy(
+    default=LeafPolicy(mode="vilamb", period_steps=8, max_vulnerable_steps=16),
+    rules=(("params*", LeafPolicy(mode="sync")),))
 
-# 2) Build the engine (paper defaults: 4+1 stripes; update period in steps).
-engine = RedundancyEngine(
-    {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in state.items()},
-    RedundancyConfig(mode="vilamb", period_steps=8))
-red = engine.init(state)
-print("blocks:", engine.metas["heap"].n_blocks,
-      "stripes:", engine.metas["heap"].n_stripes)
+store = ProtectedStore(policy).attach(state)
+red = store.init(state)
+print("blocks:", store.metas["heap"].n_blocks,
+      "stripes:", store.metas["heap"].n_stripes,
+      "| groups:", [(g.policy.mode, g.names) for g in store.groups.values()])
 
-# 3) Writes mark dirty rows; Algorithm 1 amortizes redundancy every period.
-for step in range(8):
+# 2) Writes report to the store: dirty marks for vilamb leaves, the old/new
+#    diff for sync leaves. tick() owns the Algorithm-1 schedule, scrubbing,
+#    straggler back-off, and the freshness deadline — no mode branches here.
+for step in range(1, 9):
     rows = jax.random.randint(jax.random.PRNGKey(step), (16,), 0, 1024)
+    old = dict(state)
     state["heap"] = state["heap"].at[rows].add(1.0)
-    red = engine.mark_dirty(red, {"heap": jnp.zeros((1024,), bool).at[rows].set(True)})
-stats = jax.tree.map(int, engine.dirty_stats(red))["heap"]
+    state["params"] = state["params"] * 0.999
+    red = store.on_write(
+        red, events={"heap": jnp.zeros((1024,), bool).at[rows].set(True)},
+        old=old, new=state)
+    red, report = store.tick(state, red, step)
+    if report.updated:
+        print(f"step {step}: Algorithm 1 ran for {report.updated}")
+stats = jax.tree.map(int, store.dirty_stats(red))["heap"]
 print(f"dirty blocks after 8 steps: {stats['dirty_blocks']} "
       f"(vulnerable stripes: {stats['vulnerable_stripes']})")
-red = engine.redundancy_step(state, red)          # the background thread's pass
+red = store.flush(state, red)      # preemption/battery path: force updates now
 
-# 4) Scrub detects silent corruption; parity repairs it.
-meta = engine.metas["heap"]
+# 3) Scrub detects silent corruption; parity repairs it.
+meta = store.metas["heap"]
 lanes = B.to_lanes(state["heap"], meta)
 state["heap"] = B.from_lanes(lanes.at[5, 99].add(0xBAD), meta)   # SDC!
-bad = engine.scrub(state, red)["heap"]
+bad = store.scrub(state, red)["heap"]
 print("scrub flagged blocks:", [int(i) for i in jnp.nonzero(bad)[0]])
-fixed, ok = engine.recover_block(state["heap"], red["heap"], "heap", 5)
+fixed, ok = store.recover_block(state["heap"], red["heap"], "heap", 5)
+state["heap"] = fixed
 print("parity reconstruction succeeded:", bool(ok),
-      "- scrub after repair:", int(engine.scrub({"heap": fixed}, red)["heap"].sum()))
+      "- scrub after repair:",
+      int(store.scrub(state, red)["heap"].sum()))

@@ -14,10 +14,9 @@ import jax
 import numpy as np
 
 from repro.ckpt import CheckpointManager
-from repro.ckpt.failure import repair_corruption
 from repro.common import unflatten_dict
 from repro.configs import get_smoke
-from repro.core import RedundancyConfig, RedundancyEngine
+from repro.core import ProtectedStore, RedundancyPolicy
 from repro.core import blocks as B
 from repro.data import SyntheticPipeline
 from repro.models import build_model
@@ -30,9 +29,9 @@ model = build_model(cfg)
 opt = AdamW(lr=lambda s: 1e-3)
 p0 = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 o0 = jax.eval_shape(opt.init, p0)
-engine = RedundancyEngine(protected_structs(p0, o0),
-                          RedundancyConfig(mode="vilamb", period_steps=4))
-trainer = Trainer(model=model, opt=opt, engine=engine, mode="vilamb", period_steps=4)
+store = ProtectedStore(RedundancyPolicy.single(
+    "vilamb", period_steps=4)).attach(protected_structs(p0, o0))
+trainer = Trainer(model=model, opt=opt, store=store)
 data = SyntheticPipeline(cfg, ShapeConfig("d", 64, 4, "train"), seed=0)
 ckpt = CheckpointManager("/tmp/vilamb_recovery_ckpt", keep=2)
 
@@ -45,14 +44,14 @@ print("trained 4 steps, flushed, checkpointed.")
 # --- Scenario 1: clean-stripe corruption -> parity repair ------------------
 leaves = protected_leaves(state.params, state.opt)
 name = "params/embed"
-meta = engine.metas[name]
+meta = store.metas[name]
 bad_block = meta.n_blocks // 2
 lanes = B.to_lanes(leaves[name], meta)
 leaves[name] = B.from_lanes(lanes.at[bad_block, 3].add(0xBEEF), meta)
 print("\n[1] injected a bit flip into", name, "block", bad_block)
-mm = engine.scrub(leaves, state.red)
+mm = store.scrub(leaves, state.red)
 print("    scrub detected:", int(sum(v.sum() for v in jax.tree.leaves(mm))), "block(s)")
-repaired, fixed, lost = repair_corruption(engine, leaves, state.red, mm)
+repaired, fixed, lost = store.repair(leaves, state.red, mm)
 print(f"    parity repair: fixed={fixed} unrecoverable={lost}")
 params = unflatten_dict({k[len('params/'):]: v for k, v in repaired.items()
                          if k.startswith("params/")})
@@ -66,12 +65,12 @@ print("    training continued; loss finite:", True)
 # vulnerability (§3.3). The checkpoint layer is the safety net.
 state2 = trainer.run(state, data, 1)       # fresh dirt, no redundancy pass yet
 leaves = protected_leaves(state2.params, state2.opt)
-lanes = B.to_lanes(leaves[name], engine.metas[name])
-leaves[name] = B.from_lanes(lanes.at[0, 0].add(1), engine.metas[name])
-mm = engine.scrub(leaves, state2.red)
+lanes = B.to_lanes(leaves[name], store.metas[name])
+leaves[name] = B.from_lanes(lanes.at[0, 0].add(1), store.metas[name])
+mm = store.scrub(leaves, state2.red)
 n_det = int(sum(v.sum() for v in jax.tree.leaves(mm)))
 print(f"\n[2] corruption on a DIRTY page: scrub detected={n_det} "
       "(silent — inside the paper's vulnerability window)")
-restored = ckpt.restore_into(jax.eval_shape(lambda: state2))
+restored = ckpt.restore_verified(jax.eval_shape(lambda: state2), store)
 print("    safety net: checkpoint restore at step", int(restored.step),
       "- the deterministic pipeline replays the exact stream from there.")

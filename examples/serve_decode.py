@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.common import flatten_dict
 from repro.configs import get_smoke
-from repro.core import RedundancyConfig, RedundancyEngine
+from repro.core import ProtectedStore, RedundancyPolicy
 from repro.models import build_model
 from repro.serve import Server
 
@@ -26,10 +26,9 @@ params = model.init(jax.random.PRNGKey(0))
 max_len = PROMPT + GEN + 1
 
 caches0 = jax.eval_shape(lambda: model.init_caches(BATCH, max_len, 0))
-engine = RedundancyEngine(flatten_dict(caches0),
-                          RedundancyConfig(mode="vilamb"))
-server = Server(model=model, engine=engine, mode="vilamb",
-                period_steps=16, max_len=max_len)
+store = ProtectedStore(RedundancyPolicy.single(
+    "vilamb", period_steps=16)).attach(flatten_dict(caches0))
+server = Server(model=model, store=store, max_len=max_len)
 
 for req in range(3):  # batched request waves
     batch = {"tokens": jax.random.randint(

@@ -19,7 +19,7 @@ import jax
 
 from repro.ckpt import CheckpointManager, PreemptionHandler
 from repro.configs import get_smoke
-from repro.core import RedundancyConfig, RedundancyEngine, mttdl
+from repro.core import ProtectedStore, RedundancyPolicy, mttdl
 from repro.data import SyntheticPipeline
 from repro.models import build_model
 from repro.models.config import ModelConfig, ShapeConfig
@@ -48,11 +48,10 @@ def main():
     opt = AdamW(lr=warmup_cosine(3e-4, 20, args.steps))
     p0 = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     o0 = jax.eval_shape(opt.init, p0)
-    engine = RedundancyEngine(
-        protected_structs(p0, o0),
-        RedundancyConfig(mode="vilamb", period_steps=args.period))
-    trainer = Trainer(model=model, opt=opt, engine=engine, mode="vilamb",
-                      period_steps=args.period, scrub_period_steps=4 * args.period)
+    store = ProtectedStore(RedundancyPolicy.single(
+        "vilamb", period_steps=args.period,
+        scrub_period_steps=4 * args.period)).attach(protected_structs(p0, o0))
+    trainer = Trainer(model=model, opt=opt, store=store)
     handler = PreemptionHandler().install()
     ckpt = CheckpointManager(args.ckpt, keep=2)
 
@@ -65,7 +64,7 @@ def main():
 
     def on_step(st, m):
         s = int(st.step)
-        trace.append(jax.tree.map(int, engine.dirty_stats(st.red)))
+        trace.append(jax.tree.map(int, store.dirty_stats(st.red)))
         if s % 10 == 0:
             tput = s * shape.seq_len * shape.global_batch / (time.time() - t0)
             print(f"step {s:4d} loss {float(m['loss']):.4f} {tput:,.0f} tok/s")
@@ -80,7 +79,7 @@ def main():
     ckpt.save(int(state.step), state, blocking=True)
 
     avg = mttdl.average_stats(trace)
-    up = mttdl.aggregate_uplift(avg, engine.config.stripe_data_blocks + 1)
+    up = mttdl.aggregate_uplift(avg, store.policy.stripe_data_blocks + 1)
     print(f"done. scrub alarms: {trainer.corruption_alarms}; "
           f"measured MTTDL uplift over No-Redundancy: {up:.1f}x")
 

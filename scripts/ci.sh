@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# One-invocation reproducible verify: deps -> tier-1 tests -> smoke benchmark.
+#
+#   bash scripts/ci.sh            # full tier-1 + smoke benchmark
+#   SKIP_BENCH=1 bash scripts/ci.sh   # tests only
+#
+# The test suite runs even when pip / the network is unavailable: property
+# tests fall back to the deterministic shim in tests/_hypothesis_fallback.py.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== [1/3] dependencies (best-effort) =="
+python -m pip install -q hypothesis 2>/dev/null \
+    && echo "hypothesis installed" \
+    || echo "pip/network unavailable - tests use the bundled fallback shim"
+
+echo "== [2/3] tier-1 test suite =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+  echo "== [3/3] smoke benchmark (tiny shapes) =="
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+from benchmarks.insert_throughput import run
+from benchmarks.common import emit
+emit(run(steps=6, n_rows=1024))   # tiny shapes: exercises all three policies
+EOF
+fi
+echo "== CI OK =="

@@ -15,6 +15,10 @@ Design points for fleet scale:
   * **Elastic**: leaves are saved as full logical arrays; a restarted job
     may reload onto a different mesh (reshard-on-load via device_put with
     the new shardings).
+  * **Store-verified**: ``restore_verified`` cross-checks a restored state
+    against its own redundancy (via a :class:`repro.core.ProtectedStore`
+    scrub + meta-checksum) and repairs single-block corruption from parity
+    instead of discarding the whole checkpoint.
 """
 from __future__ import annotations
 
@@ -145,6 +149,60 @@ class CheckpointManager:
                     return out
             except Exception:
                 continue
+        return None
+
+    def restore_verified(self, state_struct: Any, store, *,
+                         leaves_of=None, replace_leaves=None,
+                         shardings: Any = None,
+                         step: Optional[int] = None) -> Optional[Any]:
+        """Newest-first restore verified end-to-end by the ProtectedStore.
+
+        File checksums (``restore_into``) catch storage corruption; this
+        additionally scrubs the restored protected leaves against their
+        restored redundancy state and verifies the checksum-of-checksums.
+        Detected blocks are rebuilt from parity when their stripe permits;
+        an unrecoverable checkpoint is skipped and the previous one tried.
+
+        ``leaves_of(state) -> flat leaves`` / ``replace_leaves(state,
+        leaves) -> state`` default to the TrainState protected-leaf view.
+        """
+        if leaves_of is None or replace_leaves is None:
+            from repro.train.state import protected_leaves, replace_protected
+            leaves_of = leaves_of or (
+                lambda st: protected_leaves(st.params, st.opt))
+            replace_leaves = replace_leaves or (
+                lambda st, lv: replace_protected(st, lv))
+        candidates = self.steps()
+        if step is not None:
+            candidates = [s for s in candidates if s == step]
+        for s in reversed(candidates):
+            try:
+                state = self.restore_into(state_struct, shardings, step=s)
+            except Exception as e:
+                # Keep falling back through older checkpoints, but loudly: a
+                # systematic failure (struct mismatch, permissions) would
+                # otherwise masquerade as "no checkpoint, fresh start".
+                import warnings
+                warnings.warn(f"restore of step {s} failed: {e!r}; "
+                              "trying the previous checkpoint")
+                continue
+            if state is None:
+                continue
+            if store is None or not store.protects:
+                return state
+            red = state.red
+            leaves = leaves_of(state)
+            if not all(bool(ok) for ok in store.verify_meta(red).values()):
+                continue  # corrupted checksum pages: try the previous ckpt
+            mm = store.scrub(leaves, red)
+            if sum(int(v.sum()) for v in jax.tree_util.tree_leaves(mm)) == 0:
+                return state
+            repaired, fixed, lost = store.repair(leaves, red, mm)
+            if lost:
+                continue  # vulnerable stripe: fall back a checkpoint
+            mm2 = store.scrub(repaired, red)
+            if sum(int(v.sum()) for v in jax.tree_util.tree_leaves(mm2)) == 0:
+                return replace_leaves(state, repaired)
         return None
 
     def restore_into(self, state_struct: Any, shardings: Any = None,

@@ -59,6 +59,9 @@ def repair_corruption(engine, leaves, red, mismatches) -> tuple:
     """Recover every detected-corrupt block from parity (paper left this
     unimplemented; we do not). Returns (repaired_leaves, n_fixed, n_lost).
 
+    ``engine`` is anything exposing ``recover_block`` — a RedundancyEngine
+    or a ProtectedStore (which routes each leaf to its owning group).
+
     Blocks in vulnerable stripes cannot be rebuilt (paper §3.3) — callers
     fall back to checkpoint restore for those.
     """

@@ -1,0 +1,21 @@
+"""Version-compat shims for JAX API drift."""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # JAX >= 0.4.35 stable API
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+# Replica/VMA checking kwarg was renamed check_rep -> check_vma across JAX
+# versions; disable it under whichever name this JAX spells it.
+_CHECK_KW = ("check_vma" if "check_vma" in
+             inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(fn, **kw):
+    kw.pop("check_vma", None)
+    return _shard_map(fn, **{**kw, _CHECK_KW: False})

@@ -1,13 +1,22 @@
-"""Vilamb core: asynchronous system-redundancy for accelerator state."""
+"""Vilamb core: asynchronous system-redundancy for accelerator state.
+
+Public API: :class:`ProtectedStore` + :class:`RedundancyPolicy` own the full
+lifecycle (attach / on_write / tick / flush).  :class:`RedundancyEngine` is
+the per-group compilation target underneath.
+"""
 from .blocks import BlockMeta, make_meta, to_lanes, from_lanes
 from .checksum import block_checksums, checksum_diff, fmix32, meta_checksum
 from .engine import ALL, RedundancyConfig, RedundancyEngine
 from .parity import parity_diff, reconstruct_block, stripe_parity, stripe_parity_masked
 from .state import LeafRedundancy, RedundancyState, empty_leaf_red
+from .store import (LeafPolicy, ProtectedStore, RedundancyPolicy,
+                    StragglerGovernor, TickReport)
 
 __all__ = [
-    "ALL", "BlockMeta", "LeafRedundancy", "RedundancyConfig", "RedundancyEngine",
-    "RedundancyState", "block_checksums", "checksum_diff", "empty_leaf_red",
-    "fmix32", "from_lanes", "make_meta", "meta_checksum", "parity_diff",
-    "reconstruct_block", "stripe_parity", "stripe_parity_masked", "to_lanes",
+    "ALL", "BlockMeta", "LeafPolicy", "LeafRedundancy", "ProtectedStore",
+    "RedundancyConfig", "RedundancyEngine", "RedundancyPolicy",
+    "RedundancyState", "StragglerGovernor", "TickReport", "block_checksums",
+    "checksum_diff", "empty_leaf_red", "fmix32", "from_lanes", "make_meta",
+    "meta_checksum", "parity_diff", "reconstruct_block", "stripe_parity",
+    "stripe_parity_masked", "to_lanes",
 ]

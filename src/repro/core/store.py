@@ -1,0 +1,609 @@
+"""ProtectedStore — the library facade that owns the redundancy lifecycle.
+
+The paper presents Vilamb as a *user-space library* with one tunable knob
+between performance and redundancy freshness. This module is that library
+surface: callers hand over any pytree of protected state and interact with
+exactly three calls —
+
+  * ``store.attach(pytree, specs=...)``   declare what is protected and how
+  * ``store.on_write(red, events=...)``   inside the (jitted) mutation step
+  * ``store.tick(leaves, red, step)``     once per host step; schedules
+    Algorithm-1 updates, scrubbing with the paper's double-check, straggler
+    back-off, and freshness deadlines internally
+
+plus ``flush`` for the preemption/battery path.  Policies are declarative
+and **per leaf group** (Tvarak's heterogeneous-region argument): params may
+run ``sync`` (Pangolin-analogue inline diff) while optimizer moments and KV
+pages run ``vilamb`` with different periods.  Each distinct resolved policy
+compiles down to one :class:`~repro.core.engine.RedundancyEngine`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import fnmatch
+import statistics
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.common import flatten_dict
+
+from . import policy as policy_mod
+from .blocks import (DEFAULT_LANES_PER_BLOCK, DEFAULT_STRIPE_DATA_BLOCKS,
+                     BlockMeta, make_meta)
+from .engine import ALL, RedundancyConfig, RedundancyEngine, _local_shape
+from .state import RedundancyState
+
+MODES = ("none", "sync", "vilamb")
+
+
+# --------------------------------------------------------------------- policy
+@dataclasses.dataclass(frozen=True)
+class LeafPolicy:
+    """Redundancy policy for one leaf group.
+
+    ``max_vulnerable_steps`` / ``max_vulnerable_seconds`` make the paper's
+    tunable knob explicit: an upper bound on how long blocks may stay
+    vulnerable (dirty, redundancy stale) before an update is forced — even
+    when the straggler governor has stretched the period, and regardless of
+    where the step counter sits in the modulo schedule.  0 disables.
+    """
+    mode: str = "vilamb"                 # none | sync | vilamb
+    period_steps: int = 8                # Algorithm-1 period T (vilamb)
+    scrub_period_steps: int = 0          # 0 = no scheduled scrubbing
+    max_vulnerable_steps: int = 0        # freshness deadline, in steps
+    max_vulnerable_seconds: float = 0.0  # freshness deadline, wall clock
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown redundancy mode {self.mode!r} (want one of {MODES})")
+
+
+@dataclasses.dataclass(frozen=True)
+class RedundancyPolicy:
+    """Declarative store-wide policy: per-leaf rules + shared geometry.
+
+    ``rules`` are ``(fnmatch_pattern, LeafPolicy)`` pairs, first match wins;
+    unmatched leaves get ``default``.  Leaves resolving to an equal
+    LeafPolicy form one group backed by one RedundancyEngine.
+    """
+    default: LeafPolicy = LeafPolicy()
+    rules: Tuple[Tuple[str, LeafPolicy], ...] = ()
+    # Shared block geometry / kernel selection (RedundancyConfig fields).
+    lanes_per_block: int = DEFAULT_LANES_PER_BLOCK
+    stripe_data_blocks: int = DEFAULT_STRIPE_DATA_BLOCKS
+    use_kernels: bool = False
+    kernel_interpret: bool = True
+    # Straggler governor: stretch periods under sustained slowdown, shrink
+    # back once step times renormalize (the seed's watchdog never recovered).
+    straggler_factor: float = 3.0
+    straggler_window: int = 20
+    straggler_recovery_steps: int = 10
+    period_cap: int = 4096
+
+    def leaf_policy(self, name: str) -> LeafPolicy:
+        for pattern, lp in self.rules:
+            if fnmatch.fnmatchcase(name, pattern):
+                return lp
+        return self.default
+
+    @classmethod
+    def single(cls, mode: str, period_steps: int = 8,
+               scrub_period_steps: int = 0, max_vulnerable_steps: int = 0,
+               max_vulnerable_seconds: float = 0.0, **kw) -> "RedundancyPolicy":
+        """The old global ``RedundancyConfig.mode`` as a one-group policy."""
+        return cls(default=LeafPolicy(
+            mode=mode, period_steps=period_steps,
+            scrub_period_steps=scrub_period_steps,
+            max_vulnerable_steps=max_vulnerable_steps,
+            max_vulnerable_seconds=max_vulnerable_seconds), **kw)
+
+    @classmethod
+    def from_spec(cls, spec: str, default_mode: str = "vilamb",
+                  period_steps: int = 8, scrub_period_steps: int = 0,
+                  max_vulnerable_steps: int = 0, **kw) -> "RedundancyPolicy":
+        """Parse ``"params/*=sync,m/*=vilamb:16,v/*=none"`` into rules.
+
+        Each clause is ``pattern=mode[:period]``; omitted periods inherit
+        ``period_steps``.  An empty spec yields a single-mode policy.
+        """
+        rules: List[Tuple[str, LeafPolicy]] = []
+        for clause in filter(None, (c.strip() for c in spec.split(","))):
+            pattern, _, rhs = clause.partition("=")
+            if not rhs:
+                raise ValueError(f"bad policy clause {clause!r} "
+                                 "(want pattern=mode[:period])")
+            mode, _, per = rhs.partition(":")
+            rules.append((pattern.strip(), LeafPolicy(
+                mode=mode.strip(), period_steps=int(per) if per else period_steps,
+                scrub_period_steps=scrub_period_steps,
+                max_vulnerable_steps=max_vulnerable_steps)))
+        return cls(default=LeafPolicy(
+            mode=default_mode, period_steps=period_steps,
+            scrub_period_steps=scrub_period_steps,
+            max_vulnerable_steps=max_vulnerable_steps), rules=tuple(rules), **kw)
+
+
+# ------------------------------------------------------------------- governor
+class StragglerGovernor:
+    """Period back-off with recovery.
+
+    Under sustained slowdown (a step > ``factor`` x the rolling median) the
+    update period is stretched (doubled, capped) so redundancy never stalls
+    the critical path.  After ``recovery_steps`` consecutive normal steps
+    the stretch is halved back toward the configured period — the seed's
+    watchdog doubled forever.
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 20,
+                 recovery_steps: int = 10, max_scale: int = 512):
+        self.factor = factor
+        self.recovery_steps = recovery_steps
+        self.max_scale = max_scale
+        self.times: collections.deque = collections.deque(maxlen=window)
+        self.scale = 1
+        self._calm = 0
+
+    def observe(self, dt: float) -> int:
+        """Record one step time; returns the current period multiplier."""
+        self.times.append(dt)
+        if len(self.times) < self.times.maxlen:
+            return self.scale
+        med = statistics.median(self.times)
+        if dt > self.factor * med:
+            self.scale = min(self.scale * 2, self.max_scale)
+            self._calm = 0
+        elif self.scale > 1:
+            self._calm += 1
+            if self._calm >= self.recovery_steps:
+                self.scale = max(1, self.scale // 2)
+                self._calm = 0
+        return self.scale
+
+
+# ----------------------------------------------------------------------- tick
+@dataclasses.dataclass
+class TickReport:
+    """What one ``tick`` did (host-side observability)."""
+    step: int
+    updated: Tuple[str, ...] = ()          # group labels that ran Algorithm 1
+    deadline_fired: Tuple[str, ...] = ()   # subset forced by freshness deadline
+    scrubbed: Tuple[str, ...] = ()
+    mismatches: int = 0
+    alarms: int = 0
+
+
+@dataclasses.dataclass
+class _Group:
+    label: str
+    policy: LeafPolicy
+    names: Tuple[str, ...]
+    engine: Optional[RedundancyEngine]     # None for mode == "none"
+    last_update_step: int = 0
+    last_update_time: float = dataclasses.field(default_factory=time.monotonic)
+
+
+# ---------------------------------------------------------------------- store
+class ProtectedStore:
+    """Pytree-native facade owning the full redundancy lifecycle.
+
+    One store wraps one protected state pytree (train params+opt, serve KV
+    caches, a raw heap) and hides mode branches, scheduling, double-check
+    scrubbing, straggler back-off, and flush behind three calls.
+    """
+
+    def __init__(self, policy: Optional[RedundancyPolicy] = None,
+                 mesh: Any = None):
+        self.policy = policy or RedundancyPolicy()
+        self.mesh = mesh
+        self.groups: Dict[str, _Group] = {}
+        self.corruption_alarms = 0
+        self._none_metas: Dict[str, BlockMeta] = {}
+        self._governor = StragglerGovernor(
+            factor=self.policy.straggler_factor,
+            window=self.policy.straggler_window,
+            recovery_steps=self.policy.straggler_recovery_steps)
+        self._jit_update: Dict[str, Any] = {}
+        self._jit_scrub: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------ construction
+    def attach(self, tree: Any, specs: Optional[Mapping[str, Any]] = None
+               ) -> "ProtectedStore":
+        """Declare the protected pytree (arrays or ShapeDtypeStructs).
+
+        Nested dicts are flattened to ``a/b/c`` paths — the namespace the
+        policy rules match against.  ``specs`` optionally maps those paths
+        to PartitionSpecs for sharded (machine-local) redundancy.  Returns
+        ``self`` for chaining: ``red = store.attach(state).init(state)``.
+        """
+        flat = flatten_dict(tree)
+        structs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                   for k, v in flat.items()}
+        specs = dict(specs or {})
+        by_policy: Dict[LeafPolicy, List[str]] = {}
+        for name in structs:
+            by_policy.setdefault(self.policy.leaf_policy(name), []).append(name)
+        self.groups = {}
+        self._none_metas = {}
+        for i, (lp, names) in enumerate(by_policy.items()):
+            label = f"g{i}:{lp.mode}"
+            engine = None
+            if lp.mode == "none":
+                for n in names:
+                    lshape = _local_shape(structs[n].shape, specs.get(n), self.mesh)
+                    self._none_metas[n] = make_meta(
+                        jax.ShapeDtypeStruct(lshape, structs[n].dtype),
+                        lanes_per_block=self.policy.lanes_per_block,
+                        stripe_data_blocks=self.policy.stripe_data_blocks)
+            else:
+                cfg = RedundancyConfig(
+                    mode=lp.mode, period_steps=lp.period_steps,
+                    scrub_period_steps=lp.scrub_period_steps,
+                    lanes_per_block=self.policy.lanes_per_block,
+                    stripe_data_blocks=self.policy.stripe_data_blocks,
+                    use_kernels=self.policy.use_kernels,
+                    kernel_interpret=self.policy.kernel_interpret)
+                engine = RedundancyEngine(
+                    {n: structs[n] for n in names}, cfg, mesh=self.mesh,
+                    specs={n: specs[n] for n in names if n in specs})
+            self.groups[label] = _Group(label, lp, tuple(names), engine)
+        self._jit_update = {}
+        self._jit_scrub = {}
+        return self
+
+    @classmethod
+    def from_engine(cls, engine: RedundancyEngine, mode: str = "vilamb",
+                    period_steps: Optional[int] = None,
+                    scrub_period_steps: int = 0) -> "ProtectedStore":
+        """Wrap a pre-built single-mode engine (deprecation-shim path).
+
+        The engine keeps its geometry (lanes/stripes/kernels); the store adds
+        the lifecycle around it.
+        """
+        cfg = engine.config
+        pol = RedundancyPolicy.single(
+            mode, period_steps=period_steps if period_steps is not None
+            else cfg.period_steps,
+            scrub_period_steps=scrub_period_steps,
+            lanes_per_block=cfg.lanes_per_block,
+            stripe_data_blocks=cfg.stripe_data_blocks,
+            use_kernels=cfg.use_kernels, kernel_interpret=cfg.kernel_interpret)
+        store = cls(pol, mesh=engine.mesh)
+        if mode == "none":
+            store.groups = {}
+            store._none_metas = dict(engine.metas)
+        else:
+            store.groups = {"g0:" + mode: _Group(
+                "g0:" + mode, pol.default, tuple(engine.metas), engine)}
+        return store
+
+    # ---------------------------------------------------------------- structure
+    @property
+    def metas(self) -> Dict[str, BlockMeta]:
+        out = dict(self._none_metas)
+        for g in self.groups.values():
+            if g.engine is not None:
+                out.update(g.engine.metas)
+        return out
+
+    @property
+    def protected_metas(self) -> Dict[str, BlockMeta]:
+        """Metas of leaves that actually carry redundancy arrays."""
+        out: Dict[str, BlockMeta] = {}
+        for g in self.groups.values():
+            if g.engine is not None:
+                out.update(g.engine.metas)
+        return out
+
+    def leaf_policy(self, name: str) -> LeafPolicy:
+        for g in self.groups.values():
+            if name in g.names:
+                return g.policy
+        raise KeyError(name)
+
+    def engine_for(self, name: str) -> Optional[RedundancyEngine]:
+        for g in self.groups.values():
+            if name in g.names:
+                return g.engine
+        return None
+
+    def _protected(self) -> List[_Group]:
+        return [g for g in self.groups.values() if g.engine is not None]
+
+    @property
+    def has_sync(self) -> bool:
+        return any(g.policy.mode == "sync" for g in self._protected())
+
+    @property
+    def has_periodic(self) -> bool:
+        return any(g.policy.mode == "vilamb" for g in self._protected())
+
+    @property
+    def protects(self) -> bool:
+        return bool(self._protected())
+
+    def red_structs(self, global_: bool = True) -> RedundancyState:
+        out: RedundancyState = {}
+        for g in self._protected():
+            out.update(g.engine.red_structs(global_))
+        return out
+
+    def red_shardings(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for g in self._protected():
+            out.update(g.engine.red_shardings())
+        return out
+
+    def expand_events(self, sparse_events: Mapping[str, Any]) -> Dict[str, Any]:
+        """Suffix-keyed sparse events -> full-path events, defaulting ALL.
+
+        ``{"moe/wi": mask}`` fans out to every protected leaf whose path
+        suffix (after the first ``/``) matches; unmatched leaves are marked
+        fully dirty — the conservative choice for dense updates.
+        """
+        events: Dict[str, Any] = {}
+        for g in self._protected():
+            for name in g.names:
+                _, _, suffix = name.partition("/")
+                ev = sparse_events.get(suffix)
+                events[name] = ev if ev is not None else ALL
+        return events
+
+    # ----------------------------------------------------------------- lifecycle
+    def init(self, tree: Any) -> RedundancyState:
+        """Full redundancy computation (paper: file-creation time)."""
+        leaves = flatten_dict(tree)
+        red: RedundancyState = {}
+        for g in self._protected():
+            red.update(g.engine.init({n: leaves[n] for n in g.names}))
+        return red
+
+    def on_write(self, red: RedundancyState,
+                 events: Optional[Mapping[str, Any]] = None,
+                 old: Optional[Mapping[str, jax.Array]] = None,
+                 new: Optional[Mapping[str, jax.Array]] = None,
+                 row_diffs: Optional[Mapping[str, Tuple]] = None
+                 ) -> RedundancyState:
+        """Record writes; traceable — call inside the jitted mutation step.
+
+        Per leaf group: ``vilamb`` ORs ``events`` (dirty marks) into the
+        bitvectors; ``sync`` applies the Pangolin inline diff from
+        ``old``/``new`` (or the sparse ``row_diffs`` fast path
+        ``{name: (rows, old_rows, new_rows)}`` when rows map 1:1 to blocks);
+        ``none`` passes through.  Leaves absent from ``events`` are left
+        unmarked — use :meth:`expand_events` for dense default-ALL marking.
+        """
+        events = dict(events or {})
+        row_diffs = dict(row_diffs or {})
+        out = dict(red)
+        for g in self._protected():
+            red_sub = {n: out[n] for n in g.names}
+            if g.policy.mode == "vilamb":
+                evs = {n: events[n] for n in g.names if n in events}
+                if evs:
+                    out.update(g.engine.mark_dirty(red_sub, evs))
+            elif g.policy.mode == "sync":
+                if all(n in row_diffs for n in g.names):
+                    for n in g.names:
+                        rows, o, v = row_diffs[n]
+                        out[n] = g.engine.sync_update_rows(n, out[n], rows, o, v)
+                elif old is not None and new is not None:
+                    out.update(g.engine.sync_update(
+                        {n: old[n] for n in g.names},
+                        {n: new[n] for n in g.names}, red_sub))
+                else:
+                    raise ValueError(
+                        f"sync leaves {g.names} need old=/new= (or row_diffs=) "
+                        "in on_write")
+        return out
+
+    def _update_fn(self, label: str):
+        fn = self._jit_update.get(label)
+        if fn is None:
+            fn = jax.jit(self.groups[label].engine.redundancy_step,
+                         donate_argnums=(1,))
+            self._jit_update[label] = fn
+        return fn
+
+    def _scrub_fn(self, label: str):
+        fn = self._jit_scrub.get(label)
+        if fn is None:
+            fn = jax.jit(self.groups[label].engine.scrub)
+            self._jit_scrub[label] = fn
+        return fn
+
+    def tick(self, leaves, red: RedundancyState,
+             step: int, *, step_time: Optional[float] = None,
+             scrub_period: Optional[int] = None
+             ) -> Tuple[RedundancyState, TickReport]:
+        """One host-step heartbeat: schedule Algorithm 1 + scrubbing.
+
+        Owns the whole schedule the call sites used to hand-roll: the
+        ``step % T`` update cadence per vilamb group (stretched by the
+        straggler governor, bounded by the freshness deadline), and
+        scrubbing with the paper's double-check (re-verify on an immutable
+        snapshot after quiescing before raising an alarm).  ``step_time``
+        feeds the governor.  ``scrub_period`` overrides every group's
+        scrub cadence (legacy ``scrub_every`` knob).
+
+        ``leaves`` may be the flat leaf mapping or a zero-arg callable
+        returning it — the callable form skips building the mapping on the
+        (majority of) steps where nothing is due.
+
+        Note: the group's Algorithm-1 input (``red``) is donated — callers
+        must adopt the returned state.
+        """
+        step = int(step)
+        if step_time is not None:
+            self._governor.observe(step_time)
+        report = TickReport(step=step)
+        out = dict(red)
+        updated, deadline, scrubbed = [], [], []
+        now = time.monotonic()
+        materialized: Optional[Mapping[str, jax.Array]] = (
+            None if callable(leaves) else leaves)
+
+        def get_leaves():
+            nonlocal materialized
+            if materialized is None:
+                materialized = leaves()
+            return materialized
+
+        for g in self._protected():
+            lp = g.policy
+            if step < g.last_update_step:
+                # The step counter restarted (new serve wave / fresh run on a
+                # long-lived store): rebase so deadlines keep their meaning.
+                g.last_update_step = 0
+            if lp.mode == "vilamb":
+                eff = min(lp.period_steps * self._governor.scale,
+                          self.policy.period_cap)
+                due = policy_mod.should_update(step, eff)
+                overdue = (
+                    (lp.max_vulnerable_steps > 0
+                     and step - g.last_update_step >= lp.max_vulnerable_steps)
+                    or (lp.max_vulnerable_seconds > 0
+                        and now - g.last_update_time >= lp.max_vulnerable_seconds))
+                if due or overdue:
+                    sub = {n: get_leaves()[n] for n in g.names}
+                    out.update(self._update_fn(g.label)(
+                        sub, {n: out[n] for n in g.names}))
+                    g.last_update_step = step
+                    g.last_update_time = now
+                    updated.append(g.label)
+                    if overdue and not due:
+                        deadline.append(g.label)
+            sp = scrub_period if scrub_period is not None else lp.scrub_period_steps
+            if sp and policy_mod.should_scrub(step, sp):
+                mm, alarms = self._scrub_group(g, get_leaves(), out)
+                scrubbed.append(g.label)
+                report.mismatches += mm
+                report.alarms += alarms
+        report.updated = tuple(updated)
+        report.deadline_fired = tuple(deadline)
+        report.scrubbed = tuple(scrubbed)
+        return out, report
+
+    def flush(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
+              step: Optional[int] = None) -> RedundancyState:
+        """Battery/preemption flush: force Algorithm 1 on every vilamb group
+        now (paper §3.3).  Sync groups are up-to-date by construction.
+        Pass ``step`` when known so the steps-based freshness deadline does
+        not fire a spurious pass right after the flush."""
+        out = dict(red)
+        for g in self._protected():
+            if g.policy.mode == "vilamb":
+                out.update(self._update_fn(g.label)(
+                    {n: leaves[n] for n in g.names},
+                    {n: out[n] for n in g.names}))
+                g.last_update_time = time.monotonic()
+                if step is not None:
+                    g.last_update_step = int(step)
+        return out
+
+    def redundancy_step(self, leaves: Mapping[str, jax.Array],
+                        red: RedundancyState) -> RedundancyState:
+        """Traceable flush (no jit caching/donation) — embed in outer jits."""
+        out = dict(red)
+        for g in self._protected():
+            if g.policy.mode == "vilamb":
+                out.update(g.engine.redundancy_step(
+                    {n: leaves[n] for n in g.names},
+                    {n: out[n] for n in g.names}))
+        return out
+
+    # ------------------------------------------------------- verify + recover
+    def _scrub_group(self, g: _Group, leaves, red) -> Tuple[int, int]:
+        fn = self._scrub_fn(g.label)
+        sub = {n: leaves[n] for n in g.names}
+        red_sub = {n: red[n] for n in g.names}
+        mm = fn(sub, red_sub)
+        total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
+        alarms = 0
+        if total:
+            # Double-check (paper §3.4): quiesce in-flight work, re-verify on
+            # an immutable snapshot before raising the alarm.
+            jax.block_until_ready(sub)
+            mm = fn(sub, red_sub)
+            total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
+            if total:
+                alarms = 1
+                self.corruption_alarms += 1
+        return total, alarms
+
+    def scrub(self, leaves: Mapping[str, jax.Array], red: RedundancyState
+              ) -> Dict[str, jax.Array]:
+        """Per-leaf mismatch masks over clean blocks (no double-check)."""
+        out: Dict[str, jax.Array] = {}
+        for g in self._protected():
+            out.update(self._scrub_fn(g.label)(
+                {n: leaves[n] for n in g.names},
+                {n: red[n] for n in g.names}))
+        return out
+
+    def scrub_check(self, leaves: Mapping[str, jax.Array],
+                    red: RedundancyState) -> int:
+        """Scrub all protected groups with the double-check protocol."""
+        total = 0
+        for g in self._protected():
+            mm, _ = self._scrub_group(g, leaves, red)
+            total += mm
+        return total
+
+    def verify_meta(self, red: RedundancyState) -> Dict[str, jax.Array]:
+        out: Dict[str, jax.Array] = {}
+        for g in self._protected():
+            out.update(g.engine.verify_meta({n: red[n] for n in g.names}))
+        return out
+
+    def recover_block(self, leaf: jax.Array, r: Any, name: str, block_id):
+        engine = self.engine_for(name)
+        if engine is None:
+            raise KeyError(f"{name} is not parity-protected")
+        return engine.recover_block(leaf, r, name, block_id)
+
+    def repair(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
+               mismatches: Mapping[str, jax.Array]) -> Tuple[Dict, int, int]:
+        """Parity-rebuild every detected-corrupt block; see failure module."""
+        from repro.ckpt.failure import repair_corruption
+        return repair_corruption(self, leaves, red, mismatches)
+
+    # ------------------------------------------------------------- accounting
+    def dirty_stats(self, red: RedundancyState) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        for g in self._protected():
+            out.update(g.engine.dirty_stats({n: red[n] for n in g.names}))
+        return out
+
+    def estimate_flush(self, red: RedundancyState) -> "policy_mod.FlushEstimate":
+        """Size the preemption flush (battery analogue, paper §4.7)."""
+        stats = jax.tree.map(int, self.dirty_stats(red))
+        metas = self.metas
+        return policy_mod.estimate_flush(
+            stats, {n: metas[n].bytes_per_block for n in stats},
+            self.policy.stripe_data_blocks)
+
+
+def as_store(obj: Any, mode: Optional[str] = None,
+             period_steps: Optional[int] = None, scrub_period_steps: int = 0,
+             caller: str = "caller") -> Optional[ProtectedStore]:
+    """Coerce legacy ``(engine, mode)`` arguments into a ProtectedStore.
+
+    The one-release deprecation shim behind ``Trainer(engine=..., mode=...)``
+    and friends.  ``None`` (or mode "none" with no engine) maps to no store.
+    """
+    if obj is None or isinstance(obj, ProtectedStore):
+        return obj
+    if isinstance(obj, RedundancyEngine):
+        warnings.warn(
+            f"passing engine=/mode= to {caller} is deprecated; build a "
+            "repro.core.ProtectedStore with a RedundancyPolicy instead",
+            DeprecationWarning, stacklevel=3)
+        return ProtectedStore.from_engine(
+            obj, mode or "vilamb", period_steps=period_steps,
+            scrub_period_steps=scrub_period_steps)
+    raise TypeError(f"expected ProtectedStore/RedundancyEngine/None, got {obj!r}")

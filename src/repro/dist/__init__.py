@@ -1,0 +1,5 @@
+"""Distribution rules: per-leaf sharding specs + gradient compression."""
+from .compression import BLOCK, ef_compress
+from .sharding import cache_specs, param_specs
+
+__all__ = ["BLOCK", "cache_specs", "ef_compress", "param_specs"]

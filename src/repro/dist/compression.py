@@ -1,0 +1,47 @@
+"""Gradient compression: blockwise int8 quantization with error feedback.
+
+Cross-pod gradient reduction over DCN is bandwidth-bound; 8-bit blockwise
+quantization cuts the wire bytes 4x vs fp32 (2x vs bf16).  Error feedback
+carries the per-step quantization residual into the next step so no
+gradient mass is lost over time (the EF-SGD contract the tests pin down:
+``sum_t sent_t + err_T == sum_t grad_t``).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # elements per scale block (one f32 scale per 256 int8 payloads)
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Flat fp array (multiple of BLOCK) -> (int8[n], f32 scales[n/BLOCK]).
+
+    Symmetric round-to-nearest; scale = max|x| / 127 per block, so the
+    absolute error is bounded by scale/2 elementwise.
+    """
+    xb = x.reshape(-1, BLOCK).astype(jnp.float32)
+    s = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    q = jnp.where(s[:, None] > 0, jnp.round(xb / jnp.where(
+        s[:, None] > 0, s[:, None], 1.0)), 0.0)
+    return q.astype(jnp.int8).reshape(-1), s
+
+
+def _dequantize(q: jax.Array, s: jax.Array) -> jax.Array:
+    return (q.reshape(-1, BLOCK).astype(jnp.float32) * s[:, None]).reshape(-1)
+
+
+def ef_compress(x: jax.Array, err: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One error-feedback step: quantize (x + err), return the residual.
+
+    Returns ``(q, scales, new_err)``; the receiver reconstructs with
+    :func:`_dequantize` and the sender carries ``new_err`` into the next
+    call.
+    """
+    flat = x + err
+    q, s = _quantize(flat)
+    new_err = flat - _dequantize(q, s)
+    return q, s, new_err

@@ -29,9 +29,11 @@ def state_bytes_per_chip(flat_structs: Dict, flat_specs: Dict, mesh) -> int:
                for k, v in flat_structs.items())
 
 
-def red_bytes_per_chip(engine) -> int:
+def red_bytes_per_chip(store) -> int:
+    """Redundancy-array bytes per chip (ProtectedStore or engine)."""
     total = 0
-    for meta in engine.metas.values():  # metas are shard-local geometry
+    metas = getattr(store, "protected_metas", None) or store.metas
+    for meta in metas.values():  # metas are shard-local geometry
         total += meta.n_blocks * 4                       # checksums
         total += meta.n_stripes * meta.lanes_per_block * 4   # parity
         total += 2 * meta.n_dirty_words * 4              # dirty + shadow
@@ -95,7 +97,7 @@ def analytic_hbm(cfg, shape, mesh, setup, mode: str, accum: int) -> Dict:
         rec["params"] = pbytes
         rec["moments"] = 2 * mbytes
         rec["grads"] = mbytes * (2 if accum > 1 else 1)  # fp32 accum vs transient
-        rec["redundancy"] = red_bytes_per_chip(setup.engine) if setup.engine else 0
+        rec["redundancy"] = red_bytes_per_chip(setup.store) if setup.store else 0
         rec.update(activation_model(cfg, shape, mesh, accum))
     else:
         flat_p = flatten_dict(jax.eval_shape(setup.model.init, jax.random.PRNGKey(0)))
@@ -108,8 +110,8 @@ def analytic_hbm(cfg, shape, mesh, setup, mode: str, accum: int) -> Dict:
             flat_c = flatten_dict(caches)
             c_specs, _ = cache_specs(cfg, flat_c, setup.model.ctx, shape.global_batch)
             rec["caches"] = state_bytes_per_chip(flat_c, c_specs, mesh)
-            rec["redundancy"] = (red_bytes_per_chip(setup.engine)
-                                 if getattr(setup, "engine", None) else 0)
+            rec["redundancy"] = (red_bytes_per_chip(setup.store)
+                                 if getattr(setup, "store", None) else 0)
         else:  # prefill: transient attention/caches working set
             axes = dict(mesh.shape)
             dp = int(np.prod([axes.get(a, 1) for a in ("pod", "data")]))

@@ -3,6 +3,9 @@
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --smoke \
       --batch 4 --prompt-len 32 --gen 64 --redundancy vilamb --period 16
+
+Per-leaf policies (e.g. protect K pages harder than V pages):
+  ... --policy "*/k=vilamb:8,*/v=vilamb:64" --max-vulnerable-steps 128
 """
 from __future__ import annotations
 
@@ -23,11 +26,17 @@ def main(argv=None):
     ap.add_argument("--redundancy", default="vilamb", choices=["none", "sync", "vilamb"])
     ap.add_argument("--period", type=int, default=16)
     ap.add_argument("--scrub-every", type=int, default=16)
+    ap.add_argument("--policy", default="",
+                    help='per-leaf rules "pattern=mode[:period],..." '
+                         "(fnmatch over flat cache paths)")
+    ap.add_argument("--max-vulnerable-steps", type=int, default=0,
+                    help="freshness deadline: force an update after this "
+                         "many decode steps regardless of period")
     args = ap.parse_args(argv)
 
     from repro.common import flatten_dict
     from repro.configs import get_arch, get_smoke
-    from repro.core import RedundancyConfig, RedundancyEngine
+    from repro.core import ProtectedStore, RedundancyPolicy
     from repro.models import build_model
     from repro.serve import Server
 
@@ -46,17 +55,18 @@ def main(argv=None):
         batch["enc_input"] = jax.random.normal(
             key, (args.batch, args.prompt_len, cfg.d_model), jnp.float32)
 
-    engine = None
-    if args.redundancy != "none":
+    store = None
+    if args.redundancy != "none" or args.policy:
         caches0 = jax.eval_shape(
             lambda: model.init_caches(args.batch, max_len,
                                       args.prompt_len if cfg.enc_dec else 0))
-        engine = RedundancyEngine(
-            {k: v for k, v in flatten_dict(caches0).items()},
-            RedundancyConfig(mode=args.redundancy))
+        policy = RedundancyPolicy.from_spec(
+            args.policy, default_mode=args.redundancy,
+            period_steps=args.period,
+            max_vulnerable_steps=args.max_vulnerable_steps)
+        store = ProtectedStore(policy).attach(flatten_dict(caches0))
 
-    srv = Server(model=model, engine=engine, mode=args.redundancy,
-                 period_steps=args.period, max_len=max_len)
+    srv = Server(model=model, store=store, max_len=max_len)
     t0 = time.perf_counter()
     tokens, stats = srv.generate(params, batch, args.gen,
                                  scrub_every=args.scrub_every)

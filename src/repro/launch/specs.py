@@ -17,7 +17,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common import flatten_dict, unflatten_dict
-from repro.core.engine import RedundancyConfig, RedundancyEngine
+from repro.core.store import ProtectedStore, RedundancyPolicy
 from repro.data.pipeline import batch_structs
 from repro.dist.sharding import cache_specs, param_specs
 from repro.models import build_model
@@ -82,7 +82,7 @@ class TrainSetup:
     state_sharding: Any
     batch_struct: Dict[str, jax.ShapeDtypeStruct]
     batch_sharding: Any
-    engine: Optional[RedundancyEngine]
+    store: Optional[ProtectedStore]
     fallback_log: list
     redundancy_fn: Any = None
     red_leaves_struct: Any = None
@@ -130,15 +130,16 @@ def build_train_setup(
         root, _, suffix = k.partition("/")
         prot_specs[k] = p_specs[suffix]
 
-    engine = None
+    store = None
     red_struct: Any = {}
     red_shard: Any = {}
     if mode != "none":
-        rcfg = RedundancyConfig(mode=mode, period_steps=period_steps,
-                                use_kernels=use_kernels)
-        engine = RedundancyEngine(prot_struct, rcfg, mesh=mesh, specs=prot_specs)
-        red_struct = engine.red_structs()
-        red_shard = engine.red_shardings() if mesh is not None else {}
+        policy = RedundancyPolicy.single(mode, period_steps=period_steps,
+                                         use_kernels=use_kernels)
+        store = ProtectedStore(policy, mesh=mesh).attach(
+            prot_struct, specs=prot_specs)
+        red_struct = store.red_structs()
+        red_shard = store.red_shardings() if mesh is not None else {}
 
     state_struct = TrainState(
         params=params_struct, opt=opt_struct, red=red_struct,
@@ -165,13 +166,13 @@ def build_train_setup(
         accum_steps = default_accum(cfg, shape, mesh)
     if accum_steps > 1:
         log.append(f"grad accumulation: {accum_steps} microbatches")
-    step_fn = make_train_step(model, opt, engine, mode, accum_steps=accum_steps)
+    step_fn = make_train_step(model, opt, store, accum_steps=accum_steps)
     red_fn = None
-    if engine is not None:
+    if store is not None:
         from repro.train.train_loop import make_redundancy_step
-        red_fn = make_redundancy_step(engine)
+        red_fn = make_redundancy_step(store)
     return TrainSetup(model, step_fn, state_struct, state_sharding,
-                      b_struct, b_shard, engine, log, red_fn)
+                      b_struct, b_shard, store, log, red_fn)
 
 
 @dataclasses.dataclass
@@ -180,7 +181,7 @@ class DecodeSetup:
     step_fn: Any
     args_struct: tuple
     args_sharding: Optional[tuple]
-    engine: Optional[RedundancyEngine]
+    store: Optional[ProtectedStore]
     fallback_log: list
 
 
@@ -205,14 +206,14 @@ def build_decode_setup(
     c_specs, clog = cache_specs(cfg, flat_c, ctx, B)
     log = log + clog
 
-    engine = None
+    store = None
     red_struct: Any = {}
     red_shard: Any = {}
     if mode != "none":
-        rcfg = RedundancyConfig(mode=mode, use_kernels=use_kernels)
-        engine = RedundancyEngine(flat_c, rcfg, mesh=mesh, specs=c_specs)
-        red_struct = engine.red_structs()
-        red_shard = engine.red_shardings() if mesh is not None else {}
+        policy = RedundancyPolicy.single(mode, use_kernels=use_kernels)
+        store = ProtectedStore(policy, mesh=mesh).attach(flat_c, specs=c_specs)
+        red_struct = store.red_structs()
+        red_shard = store.red_shardings() if mesh is not None else {}
 
     token_struct = jax.ShapeDtypeStruct((B,), jnp.int32)
     pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
@@ -232,8 +233,8 @@ def build_decode_setup(
             rep,
         )
 
-    step_fn = make_decode_step(model, engine, mode)
-    return DecodeSetup(model, step_fn, args_struct, args_sharding, engine, log)
+    step_fn = make_decode_step(model, store)
+    return DecodeSetup(model, step_fn, args_struct, args_sharding, store, log)
 
 
 @dataclasses.dataclass

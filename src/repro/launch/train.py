@@ -3,13 +3,18 @@
 Single-host CPU execution for development; the same script drives the
 production mesh when run under multi-host JAX (jax.distributed initializes
 from the cluster env). Wires together: config -> model -> sharding rules ->
-redundancy engine -> Trainer loop -> checkpoints -> preemption handler.
+ProtectedStore (per-leaf policies) -> Trainer loop -> checkpoints ->
+preemption handler.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
       --steps 50 --redundancy vilamb --period 8
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke \
       --steps 20 --redundancy sync --inject-corruption 10
+
+Per-leaf policies (params sync-protected, Adam moments amortized):
+  ... --policy "params/*=sync,m/*=vilamb:16,v/*=vilamb:16" \
+      --max-vulnerable-steps 64
 """
 from __future__ import annotations
 
@@ -32,6 +37,12 @@ def main(argv=None):
     ap.add_argument("--redundancy", default="vilamb", choices=["none", "sync", "vilamb"])
     ap.add_argument("--period", type=int, default=8)
     ap.add_argument("--scrub-period", type=int, default=32)
+    ap.add_argument("--policy", default="",
+                    help='per-leaf rules "pattern=mode[:period],..." '
+                         "(fnmatch over params/... m/... v/... paths)")
+    ap.add_argument("--max-vulnerable-steps", type=int, default=0,
+                    help="freshness deadline: force an update after this "
+                         "many steps regardless of period/back-off")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -42,7 +53,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.configs import get_arch, get_smoke
-    from repro.core import RedundancyConfig, RedundancyEngine
+    from repro.core import ProtectedStore, RedundancyPolicy
     from repro.core import blocks as B
     from repro.data import SyntheticPipeline
     from repro.models import build_model
@@ -50,7 +61,6 @@ def main(argv=None):
     from repro.optim import AdamW, warmup_cosine
     from repro.train import Trainer, protected_leaves, protected_structs
     from repro.ckpt import CheckpointManager, PreemptionHandler
-    from repro.ckpt.failure import repair_corruption
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     model = build_model(cfg)
@@ -59,16 +69,17 @@ def main(argv=None):
     opt = AdamW(lr=warmup_cosine(args.lr, 10, args.steps),
                 moment_dtype=cfg.moment_dtype)
 
-    engine = None
-    if args.redundancy != "none":
+    store = None
+    if args.redundancy != "none" or args.policy:
         params0 = jax.eval_shape(model.init, jax.random.PRNGKey(0))
         opt0 = jax.eval_shape(opt.init, params0)
-        engine = RedundancyEngine(
-            protected_structs(params0, opt0),
-            RedundancyConfig(mode=args.redundancy, period_steps=args.period))
+        policy = RedundancyPolicy.from_spec(
+            args.policy, default_mode=args.redundancy,
+            period_steps=args.period, scrub_period_steps=args.scrub_period,
+            max_vulnerable_steps=args.max_vulnerable_steps)
+        store = ProtectedStore(policy).attach(protected_structs(params0, opt0))
 
-    trainer = Trainer(model=model, opt=opt, engine=engine,
-                      mode=args.redundancy, period_steps=args.period,
+    trainer = Trainer(model=model, opt=opt, store=store,
                       scrub_period_steps=args.scrub_period)
     handler = PreemptionHandler().install()
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
@@ -76,7 +87,9 @@ def main(argv=None):
     state = None
     if ckpt is not None and args.resume:
         struct = jax.eval_shape(lambda: trainer.init_state(jax.random.PRNGKey(0)))
-        state = ckpt.restore_into(struct)
+        # Verified restore: scrub against the persisted redundancy and
+        # parity-repair single-block corruption before resuming.
+        state = ckpt.restore_verified(struct, store)
         if state is not None:
             print(f"[train] resumed from step {int(state.step)}")
     if state is None:
@@ -99,19 +112,19 @@ def main(argv=None):
         state = trainer.run(state, data, chunk, on_step=on_step)
 
         # Demonstration: SDC injection -> scrub detect -> parity repair.
-        if args.inject_corruption and done >= args.inject_corruption and engine:
+        if args.inject_corruption and done >= args.inject_corruption and store:
             args.inject_corruption = 0
             state = trainer.flush(state)  # make everything clean/covered
             leaves = protected_leaves(state.params, state.opt)
-            name = sorted(leaves)[0]
-            meta = engine.metas[name]
+            name = sorted(store.protected_metas)[0]
+            meta = store.metas[name]
             lanes = B.to_lanes(leaves[name], meta)
             lanes = lanes.at[0, 0].add(np.uint32(0xDEAD))
             leaves[name] = B.from_lanes(lanes, meta)
-            mm = engine.scrub(leaves, state.red)
+            mm = store.scrub(leaves, state.red)
             n_bad = int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
-            repaired, fixed, lostn = repair_corruption(engine, leaves, state.red, mm)
-            mm2 = engine.scrub(repaired, state.red)
+            repaired, fixed, lostn = store.repair(leaves, state.red, mm)
+            mm2 = store.scrub(repaired, state.red)
             n_after = int(sum(int(v.sum()) for v in jax.tree.leaves(mm2)))
             print(f"[vilamb] injected corruption: detected={n_bad} "
                   f"repaired={fixed} unrecoverable={lostn} residual={n_after}")

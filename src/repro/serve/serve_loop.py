@@ -3,20 +3,26 @@
 In serving, params are immutable (redundancy computed once at load); the
 *KV cache* is the hot, sparsely-written state — each decode step dirties one
 page per layer, the closest analogue of the paper's cache-line writes to DAX
-pages. Recurrent-state caches (mamba/xlstm) rewrite wholesale and are marked
-ALL-dirty.
+pages.  Recurrent-state caches (mamba/xlstm) rewrite wholesale and are
+marked ALL-dirty.
+
+The redundancy lifecycle is owned by a :class:`repro.core.ProtectedStore`:
+``decode_step`` records writes via ``store.on_write`` and the generate loop
+heartbeats ``store.tick`` — the same scheduling code the Trainer uses, so
+serve and train can no longer drift on step semantics.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.common import flatten_dict, unflatten_dict
-from repro.core import policy
-from repro.core.engine import ALL, RedundancyEngine
+from repro.common import flatten_dict
+from repro.core.engine import RedundancyEngine
+from repro.core.store import ProtectedStore, as_store
 
 
 def make_prefill(model, max_len: int) -> Callable:
@@ -25,20 +31,23 @@ def make_prefill(model, max_len: int) -> Callable:
     return prefill
 
 
-def make_decode_step(model, engine: Optional[RedundancyEngine] = None,
-                     mode: str = "none") -> Callable:
-    """decode_step(params, caches, red, token, pos) -> (logits, caches, red, next)."""
+def make_decode_step(model, store: Optional[Any] = None,
+                     mode: Optional[str] = None) -> Callable:
+    """decode_step(params, caches, red, token, pos) -> (logits, caches, red, next).
+
+    ``store`` is a ProtectedStore (or, deprecated, a RedundancyEngine with
+    ``mode``)."""
+    store = as_store(store, mode, caller="make_decode_step")
 
     def decode_step(params, caches, red, token, pos):
         logits, new_caches, next_token, _ = model.decode_step(params, caches, token, pos)
-        if engine is not None:
-            events = model.dirty_events_decode(new_caches, pos)
-            if mode == "vilamb":
-                red = engine.mark_dirty(red, events)
-            elif mode == "sync":
+        if store is not None and store.protects:
+            old = new = None
+            if store.has_sync:
                 old = flatten_dict(caches)
                 new = flatten_dict(new_caches)
-                red = engine.sync_update(old, new, red)
+            red = store.on_write(red, events=model.dirty_events_decode(new_caches, pos),
+                                 old=old, new=new)
         return logits, new_caches, red, next_token
 
     return decode_step
@@ -47,44 +56,55 @@ def make_decode_step(model, engine: Optional[RedundancyEngine] = None,
 @dataclasses.dataclass
 class Server:
     model: Any
-    engine: Optional[RedundancyEngine] = None
-    mode: str = "none"
+    store: Optional[ProtectedStore] = None
+    engine: Optional[RedundancyEngine] = None      # deprecated: use store=
+    mode: Optional[str] = None                     # deprecated: use store=
     period_steps: int = 64
     max_len: int = 2048
 
     def __post_init__(self):
+        if self.store is None and self.engine is not None:
+            self.store = as_store(self.engine, self.mode or "vilamb",
+                                  period_steps=self.period_steps,
+                                  caller="Server")
+        if self.store is not None and not self.store.protects:
+            self.store = None
         self.prefill = jax.jit(make_prefill(self.model, self.max_len))
         self.decode = jax.jit(
-            make_decode_step(self.model, self.engine, self.mode),
+            make_decode_step(self.model, self.store),
             donate_argnums=(1, 2))
-        if self.engine is not None:
-            self._red_step = jax.jit(
-                lambda caches, red: self.engine.redundancy_step(flatten_dict(caches), red),
-                donate_argnums=(1,))
-            self._scrub = jax.jit(
-                lambda caches, red: self.engine.scrub(flatten_dict(caches), red))
 
     def init_redundancy(self, caches):
-        if self.engine is None:
+        if self.store is None:
             return {}
-        return self.engine.init(flatten_dict(caches))
+        return self.store.init(flatten_dict(caches))
 
     def generate(self, params, batch, n_tokens: int,
-                 scrub_every: int = 0) -> Tuple[jax.Array, Dict[str, Any]]:
-        """Prefill then decode n_tokens greedily; returns (tokens, stats)."""
+                 scrub_every: Optional[int] = None
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Prefill then decode n_tokens greedily; returns (tokens, stats).
+
+        The store's tick owns update + scrub cadence; ``scrub_every``
+        overrides the policy scrub period for this call (legacy knob):
+        ``None`` defers to the policy, ``0`` disables scrubbing.  Decode
+        intervals feed the straggler governor, so a stalling host stretches
+        the redundancy period here exactly as in training."""
         logits, caches, pos = self.prefill(params, batch)
         red = self.init_redundancy(caches)
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [token]
         mismatches = 0
+        last = time.perf_counter()
         for t in range(n_tokens - 1):
             logits, caches, red, token = self.decode(params, caches, red, token, pos + t)
             out.append(token)
-            if (self.engine is not None and self.mode == "vilamb"
-                    and policy.should_update(t + 1, self.period_steps)):
-                red = self._red_step(caches, red)
-            if self.engine is not None and scrub_every and (t + 1) % scrub_every == 0:
-                mm = self._scrub(caches, red)
-                mismatches += int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
+            if self.store is not None:
+                c = caches
+                red, report = self.store.tick(
+                    lambda: flatten_dict(c), red, t + 1,
+                    step_time=time.perf_counter() - last,
+                    scrub_period=scrub_every)
+                mismatches += report.mismatches
+                last = time.perf_counter()
         return jnp.stack(out, axis=1), {"mismatches": mismatches, "red": red,
                                         "caches": caches, "pos": pos + n_tokens - 1}

@@ -1,2 +1,3 @@
-from .state import TrainState, protected_leaves, protected_structs
+from .state import (TrainState, protected_leaves, protected_structs,
+                    replace_protected)
 from .train_loop import make_train_step, make_redundancy_step, Trainer

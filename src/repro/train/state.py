@@ -44,3 +44,24 @@ def protected_structs(params, opt_state) -> Dict[str, jax.ShapeDtypeStruct]:
         k: jax.ShapeDtypeStruct(v.shape, v.dtype)
         for k, v in protected_leaves(params, opt_state).items()
     }
+
+
+def replace_protected(state: TrainState, leaves: Dict[str, Any]) -> TrainState:
+    """Inverse of :func:`protected_leaves`: fold repaired/restored flat
+    leaves back into a TrainState (params + Adam moments; count untouched).
+
+    Updates leaves on the existing trees (preserving empty subtrees that
+    flattening drops, e.g. non-learnable norms) rather than rebuilding.
+    """
+    import dataclasses
+
+    def update(tree: Any, prefix: str) -> Any:
+        if isinstance(tree, dict):
+            return {k: update(v, f"{prefix}{k}/") for k, v in tree.items()}
+        return leaves.get(prefix[:-1], tree)
+
+    opt = dict(state.opt)
+    opt["m"] = update(state.opt["m"], "m/")
+    opt["v"] = update(state.opt["v"], "v/")
+    return dataclasses.replace(
+        state, params=update(state.params, "params/"), opt=opt)

@@ -1,11 +1,11 @@
-"""Train-step factories with the three redundancy modes + the host Trainer.
+"""Train-step factory + host Trainer, both driven by a ProtectedStore.
 
-Modes (paper Table 1):
-  none   — No-Redundancy baseline.
-  sync   — Pangolin analogue: diff-based checksum+parity inside the step.
-  vilamb — dirty marking inside the step; Algorithm 1 runs every K steps as
-           a separate jitted ``redundancy_step`` (async dispatch lets it
-           pipeline behind subsequent train steps on a real TPU).
+The redundancy lifecycle (dirty marking vs sync diff per leaf group,
+Algorithm-1 scheduling, scrub double-check, straggler back-off, preemption
+flush) lives behind :class:`repro.core.ProtectedStore`; this module only
+wires the model/optimizer step into it.  The legacy
+``Trainer(engine=..., mode=...)`` signature still works for one release via
+the deprecation shim.
 """
 from __future__ import annotations
 
@@ -16,29 +16,23 @@ from typing import Any, Callable, Dict, Mapping, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.common import flatten_dict
-from repro.core import policy
-from repro.core.engine import ALL, RedundancyEngine
+from repro.core.engine import RedundancyEngine
+from repro.core.store import ProtectedStore, as_store
 from repro.optim.adamw import AdamW
 from .state import TrainState, protected_leaves
 
 
-def expand_events(engine: RedundancyEngine, sparse_events: Mapping[str, Any]):
-    """Suffix events -> full engine-leaf events; everything else ALL-dirty."""
-    events: Dict[str, Any] = {}
-    for name in engine.metas:
-        root, _, suffix = name.partition("/")
-        ev = sparse_events.get(suffix)
-        events[name] = ev if ev is not None else ALL
-    return events
-
-
-def make_train_step(model, opt: AdamW, engine: Optional[RedundancyEngine],
-                    mode: str = "none", accum_steps: int = 1) -> Callable:
+def make_train_step(model, opt: AdamW,
+                    store: Optional[Any] = None,
+                    mode: Optional[str] = None,
+                    accum_steps: int = 1) -> Callable:
     """accum_steps > 1 microbatches the global batch (gradient accumulation):
     activation memory scales down by the accumulation factor; gradients
-    accumulate in fp32 across microbatches inside one jitted step."""
-    assert mode in ("none", "sync", "vilamb")
+    accumulate in fp32 across microbatches inside one jitted step.
+
+    ``store`` is a ProtectedStore (or, deprecated, a RedundancyEngine paired
+    with ``mode``)."""
+    store = as_store(store, mode, caller="make_train_step")
 
     def grads_of(params, batch):
         if accum_steps == 1:
@@ -88,12 +82,13 @@ def make_train_step(model, opt: AdamW, engine: Optional[RedundancyEngine],
         new_params, new_opt, gnorm = opt.update(
             grads, state.opt, state.params, row_masks)
         red = state.red
-        if engine is not None and mode == "sync":
-            old = protected_leaves(state.params, state.opt)
-            new = protected_leaves(new_params, new_opt)
-            red = engine.sync_update(old, new, red)
-        elif engine is not None and mode == "vilamb":
-            red = engine.mark_dirty(red, expand_events(engine, sparse_events))
+        if store is not None and store.protects:
+            old = new = None
+            if store.has_sync:
+                old = protected_leaves(state.params, state.opt)
+                new = protected_leaves(new_params, new_opt)
+            red = store.on_write(red, events=store.expand_events(sparse_events),
+                                 old=old, new=new)
         metrics = {"loss": loss, "ce": aux["ce"], "grad_norm": gnorm,
                    "aux_loss": aux["aux_loss"]}
         return TrainState(new_params, new_opt, red, state.step + 1), metrics
@@ -101,95 +96,97 @@ def make_train_step(model, opt: AdamW, engine: Optional[RedundancyEngine],
     return train_step
 
 
-def make_redundancy_step(engine: RedundancyEngine) -> Callable:
-    """Algorithm 1 over the protected state (the paper's background thread)."""
+def make_redundancy_step(store) -> Callable:
+    """Algorithm 1 over the protected state (the paper's background thread).
+
+    ``store`` may be a ProtectedStore or a bare RedundancyEngine — both
+    expose a traceable ``redundancy_step(leaves, red)``."""
     def redundancy_step(state: TrainState) -> TrainState:
         leaves = protected_leaves(state.params, state.opt)
-        red = engine.redundancy_step(leaves, state.red)
+        red = store.redundancy_step(leaves, state.red)
         return dataclasses.replace(state, red=red)
     return redundancy_step
 
 
-def make_scrub(engine: RedundancyEngine) -> Callable:
-    def scrub(state: TrainState):
-        leaves = protected_leaves(state.params, state.opt)
-        return engine.scrub(leaves, state.red)
-    return scrub
-
-
 @dataclasses.dataclass
 class Trainer:
-    """Host-side loop: periodic redundancy, scrubbing w/ double-check,
-    preemption flush, straggler watchdog."""
+    """Host-side loop around ``store.tick``: periodic redundancy, scrubbing
+    with double-check, preemption flush, straggler back-off with recovery —
+    all owned by the ProtectedStore."""
     model: Any
     opt: AdamW
-    engine: Optional[RedundancyEngine] = None
-    mode: str = "none"
+    store: Optional[ProtectedStore] = None
+    engine: Optional[RedundancyEngine] = None      # deprecated: use store=
+    mode: Optional[str] = None                     # deprecated: use store=
     period_steps: int = 8
-    scrub_period_steps: int = 0
+    # None defers to the store's per-leaf policy; 0 disables scrubbing.
+    scrub_period_steps: Optional[int] = None
     donate: bool = True
 
     def __post_init__(self):
+        if self.store is None and self.engine is not None:
+            self.store = as_store(self.engine, self.mode or "vilamb",
+                                  period_steps=self.period_steps,
+                                  scrub_period_steps=self.scrub_period_steps or 0,
+                                  caller="Trainer")
+        if self.store is not None and not self.store.protects:
+            self.store = None
         donate = (0,) if self.donate else ()
         self.train_step = jax.jit(
-            make_train_step(self.model, self.opt, self.engine, self.mode),
+            make_train_step(self.model, self.opt, self.store),
             donate_argnums=donate)
         self.redundancy_step = (
-            jax.jit(make_redundancy_step(self.engine), donate_argnums=donate)
-            if self.engine is not None else None)
-        self.scrub_fn = (jax.jit(make_scrub(self.engine))
-                         if self.engine is not None else None)
+            jax.jit(make_redundancy_step(self.store), donate_argnums=donate)
+            if self.store is not None else None)
+        self.scrub_fn = ((lambda state: self.store.scrub(
+            protected_leaves(state.params, state.opt), state.red))
+            if self.store is not None else None)
         self.step_times: list = []
-        self.corruption_alarms: int = 0
+
+    @property
+    def corruption_alarms(self) -> int:
+        return self.store.corruption_alarms if self.store is not None else 0
 
     def init_state(self, key) -> TrainState:
         params = self.model.init(key)
         opt_state = self.opt.init(params)
         red = {}
-        if self.engine is not None:
-            red = self.engine.init(protected_leaves(params, opt_state))
+        if self.store is not None:
+            red = self.store.init(protected_leaves(params, opt_state))
         return TrainState.create(params, opt_state, red)
 
     def scrub_check(self, state: TrainState) -> int:
-        """Scrub with the paper's double-check: on mismatch, re-verify after
-        quiescing in-flight work (block_until_ready) before raising."""
-        mm = self.scrub_fn(state)
-        total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
-        if total:
-            jax.block_until_ready(state.params)
-            mm2 = self.scrub_fn(state)           # second check (paper §3.4)
-            total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm2)))
-            if total:
-                self.corruption_alarms += 1
-        return total
+        """Scrub with the paper's double-check (delegated to the store)."""
+        if self.store is None:
+            return 0
+        return self.store.scrub_check(
+            protected_leaves(state.params, state.opt), state.red)
 
     def flush(self, state: TrainState) -> TrainState:
         """Battery/preemption flush: force Algorithm 1 now (paper §3.3)."""
-        if self.redundancy_step is None:
+        if self.store is None:
             return state
-        return self.redundancy_step(state)
+        red = self.store.flush(
+            protected_leaves(state.params, state.opt), state.red,
+            step=int(state.step))
+        return dataclasses.replace(state, red=red)
 
     def run(self, state: TrainState, data, steps: int,
             log_every: int = 10, on_step=None) -> TrainState:
+        scrub_period = self.scrub_period_steps
         for i in range(steps):
             t0 = time.perf_counter()
             batch = data.get(int(state.step))
             state, metrics = self.train_step(state, batch)
-            if (self.mode == "vilamb" and self.redundancy_step is not None
-                    and policy.should_update(int(state.step), self.period_steps)):
-                state = self.redundancy_step(state)
-            if (self.scrub_fn is not None and self.scrub_period_steps
-                    and policy.should_scrub(int(state.step), self.scrub_period_steps)):
-                self.scrub_check(state)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self.step_times.append(dt)
-            # Straggler watchdog: under sustained slowdown, defer redundancy
-            # (stretch the period) rather than stall the step (paper's knob).
-            if len(self.step_times) > 20:
-                med = sorted(self.step_times[-20:])[10]
-                if dt > 3 * med and self.period_steps:
-                    self.period_steps = min(self.period_steps * 2, 4096)
+            if self.store is not None:
+                st = state
+                red, _ = self.store.tick(
+                    lambda: protected_leaves(st.params, st.opt), st.red,
+                    int(st.step), step_time=dt, scrub_period=scrub_period)
+                state = dataclasses.replace(state, red=red)
             if on_step is not None:
                 on_step(state, metrics)
         return state

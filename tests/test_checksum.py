@@ -4,7 +4,10 @@ Pangolin-style incremental diffs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import checksum as C
 
