@@ -3,16 +3,69 @@
 Prints ``name,us_per_call,derived`` CSV (absolute wall numbers are CPU;
 cross-mode ratios reproduce the paper's claims). Roofline terms come from
 the dry-run artifacts (see repro.launch.dryrun).
+
+Machine-readable output (perf trajectory tracking, see docs/perf.md):
+
+    python -m benchmarks.run --json BENCH_PR2.json            # full sweep
+    python -m benchmarks.run --json BENCH_PR2.json --smoke \
+        --only insert_throughput,dirty_cost                   # CI artifact
+
+The JSON artifact is ``{"env": {...}, "rows": [{name, us_per_call,
+derived}, ...]}`` — one row per CSV line, plus enough environment metadata
+to compare artifacts across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 import time
 
 sys.path.insert(0, "src")
 
+# Per-module kwargs for --smoke (tiny shapes, CI-budget runtimes).
+SMOKE_KW = {
+    "insert_throughput": dict(steps=6, n_rows=1024),
+    "ycsb": dict(steps=6, n_rows=1024, batch=128),
+    "op_latency": dict(n_rows=1024),
+    "overwrite_scaling": dict(steps=6, n_rows=1024),
+    "fio_patterns": dict(steps=6, n_rows=1024, batch=32),
+    # fig9a capped at 4096 rows; the fig9c sweep keeps its representative
+    # region size (sweep_rows default) even in smoke mode — see dirty_cost.
+    "dirty_cost": dict(n_rows=4096, iters=10),
+    "battery": dict(n_rows=1024),
+    "mttdl_bench": dict(n_rows=1024, steps=12),
+    "kernel_bench": dict(nb=128, L=512),
+}
 
-def main() -> None:
+
+def _env_metadata(args) -> dict:
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device": str(dev.device_kind),
+        "device_count": jax.device_count(),
+        "smoke": bool(args.smoke),
+        "only": args.only or None,
+    }
+
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--json", dest="json_path", default=None,
+                   help="also write rows + env metadata to this JSON file")
+    p.add_argument("--only", default="",
+                   help="comma-separated module names (e.g. dirty_cost,ycsb)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny shapes / few iterations (CI budget)")
+    args = p.parse_args(argv)
+
     from . import (battery, dirty_cost, fio_patterns, insert_throughput,
                    kernel_bench, mttdl_bench, op_latency, overwrite_scaling,
                    roofline, ycsb)
@@ -30,15 +83,41 @@ def main() -> None:
         ("kernel fusion", kernel_bench),
         ("roofline", roofline),
     ]
+    selected = {s.strip() for s in args.only.split(",") if s.strip()}
+    known = {mod.__name__.rsplit(".", 1)[-1] for _, mod in modules}
+    unknown = selected - known
+    if unknown:
+        p.error(f"unknown --only module(s) {sorted(unknown)}; "
+                f"choose from {sorted(known)}")
+    all_rows = []
     print("name,us_per_call,derived")
     for title, mod in modules:
+        short = mod.__name__.rsplit(".", 1)[-1]
+        if selected and short not in selected:
+            continue
+        kw = SMOKE_KW.get(short, {}) if args.smoke else {}
         t0 = time.time()
         try:
-            rows = mod.run()
+            rows = mod.run(**kw)
             emit(rows)
+            all_rows.extend(rows)
         except Exception as e:  # keep the harness running
             print(f"{title},0,ERROR {type(e).__name__}: {e}")
+            all_rows.append((f"{short}/ERROR", 0.0,
+                             f"{type(e).__name__}: {e}"))
         print(f"# [{title}] {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.json_path:
+        doc = {
+            "env": _env_metadata(args),
+            "rows": [{"name": n, "us_per_call": round(float(us), 2),
+                      "derived": str(d)} for n, us, d in all_rows],
+        }
+        with open(args.json_path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json_path} ({len(doc['rows'])} rows)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -18,11 +18,12 @@ echo "== [2/3] tier-1 test suite =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
-  echo "== [3/3] smoke benchmark (tiny shapes) =="
-  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
-from benchmarks.insert_throughput import run
-from benchmarks.common import emit
-emit(run(steps=6, n_rows=1024))   # tiny shapes: exercises all three policies
-EOF
+  echo "== [3/3] smoke benchmark (tiny shapes) + perf artifact =="
+  # insert_throughput exercises all three policies; dirty_cost sweeps the
+  # work-queue dirty-fraction scaling.  The JSON artifact (BENCH_PR2.json)
+  # is the machine-readable perf trajectory — see docs/perf.md.
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
+      --smoke --only insert_throughput,dirty_cost \
+      --json "${BENCH_JSON:-BENCH_PR2.json}"
 fi
 echo "== CI OK =="

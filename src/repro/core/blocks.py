@@ -147,6 +147,14 @@ def blocks_of_rows(meta: BlockMeta, row_ids: jax.Array) -> jax.Array:
     return block_of_index(meta, first)
 
 
+def _row_geometry(meta: BlockMeta, row_dims: int):
+    """(row_lanes, blocks_per_row) for rows over the first ``row_dims`` axes."""
+    row_elems = int(np.prod(meta.shape[row_dims:])) if len(meta.shape) > row_dims else 1
+    row_lanes = -(-row_elems // meta.elems_per_word) if meta.elems_per_word else row_elems
+    blocks_per_row = max(1, -(-row_elems // (meta.lanes_per_block * meta.elems_per_word)) + 1)
+    return row_lanes, blocks_per_row
+
+
 def row_block_mask(meta: BlockMeta, row_ids: jax.Array, row_dims: int = 1) -> jax.Array:
     """bool[n_blocks] mask of all blocks touched by the given rows.
 
@@ -156,9 +164,7 @@ def row_block_mask(meta: BlockMeta, row_ids: jax.Array, row_dims: int = 1) -> ja
     """
     if not meta.shape:
         return jnp.ones((meta.n_blocks,), bool)
-    row_elems = int(np.prod(meta.shape[row_dims:])) if len(meta.shape) > row_dims else 1
-    row_lanes = -(-row_elems // meta.elems_per_word) if meta.elems_per_word else row_elems
-    blocks_per_row = max(1, -(-row_elems // (meta.lanes_per_block * meta.elems_per_word)) + 1)
+    row_lanes, blocks_per_row = _row_geometry(meta, row_dims)
     valid = row_ids >= 0
     safe_rows = jnp.where(valid, row_ids, 0)
     first_lane = safe_rows.astype(jnp.int64 if meta.n_lanes > 2**31 else jnp.int32) * row_lanes
@@ -171,3 +177,38 @@ def row_block_mask(meta: BlockMeta, row_ids: jax.Array, row_dims: int = 1) -> ja
     ids = jnp.where(in_range & valid[:, None], ids, meta.n_blocks)
     mask = jnp.zeros((meta.n_blocks,), bool).at[ids.reshape(-1)].set(True, mode="drop")
     return mask
+
+
+def row_mask_block_mask(meta: BlockMeta, row_mask: jax.Array,
+                        row_dims: int = 1) -> jax.Array:
+    """bool[n_blocks] of blocks touched by set rows of a bool row mask.
+
+    Same semantics as ``row_block_mask(meta, nonzero(row_mask))`` but with
+    no ``nonzero`` materialization: when rows pack evenly into blocks the
+    translation is a plain reshape-any reduction; otherwise it is a masked
+    scatter-OR over the row range — cost tracks the event shape, never the
+    leaf size.
+    """
+    if not meta.shape:
+        return jnp.full((meta.n_blocks,), jnp.any(row_mask))
+    row_mask = row_mask.reshape(-1)
+    nb, L = meta.n_blocks, meta.lanes_per_block
+    row_lanes, blocks_per_row = _row_geometry(meta, row_dims)
+    R = row_mask.shape[0]
+    if row_lanes <= L and L % row_lanes == 0:
+        # Rows never straddle a block boundary: block b = row // rows_per_block.
+        rpb = L // row_lanes
+        pad = -R % rpb
+        per_block = jnp.pad(row_mask, (0, pad)).reshape(-1, rpb).any(axis=1)
+        if per_block.shape[0] >= nb:
+            return per_block[:nb]
+        return jnp.pad(per_block, (0, nb - per_block.shape[0]))
+    idt = jnp.int64 if meta.n_lanes > 2**31 else jnp.int32
+    first_lane = jnp.arange(R, dtype=idt) * row_lanes
+    first_block = first_lane // L
+    last_block = (first_lane + row_lanes - 1) // L
+    offs = jnp.arange(blocks_per_row, dtype=idt)
+    ids = first_block[:, None] + offs[None, :]
+    live = (ids <= last_block[:, None]) & row_mask[:, None]
+    ids = jnp.where(live, ids, nb)
+    return jnp.zeros((nb,), bool).at[ids.reshape(-1)].set(True, mode="drop")

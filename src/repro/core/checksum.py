@@ -81,3 +81,18 @@ def meta_checksum(checksums: jax.Array) -> jax.Array:
     ids = jnp.arange(flat.shape[0], dtype=jnp.uint32)
     h = fmix32(flat ^ (ids * GOLDEN))
     return jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+
+
+def meta_checksum_delta(
+    old_vals: jax.Array, new_vals: jax.Array, block_ids: jax.Array
+) -> jax.Array:
+    """XOR-delta of :func:`meta_checksum` from changed entries only.
+
+    ``meta' = meta ^ meta_checksum_delta(old, new, ids)`` is bitwise equal to
+    rehashing every checksum, by XOR cancellation.  Entries with
+    ``old == new`` contribute zero, so callers may pad with no-op rows
+    (each block id must appear at most once with ``old != new``).
+    """
+    salt = block_ids.astype(jnp.uint32) * GOLDEN
+    h = fmix32(old_vals ^ salt) ^ fmix32(new_vals ^ salt)
+    return jax.lax.reduce(h.reshape(-1), jnp.uint32(0), jax.lax.bitwise_xor, (0,))

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from . import bits, blocks, checksum, parity
+from . import bits, blocks, checksum, parity, workqueue
 from .blocks import BlockMeta, DEFAULT_LANES_PER_BLOCK, DEFAULT_STRIPE_DATA_BLOCKS
 from .state import LeafRedundancy, RedundancyState, empty_leaf_red, leaf_red_struct
 
@@ -43,6 +43,11 @@ class RedundancyConfig:
     stripe_data_blocks: int = DEFAULT_STRIPE_DATA_BLOCKS
     use_kernels: bool = False            # Pallas path (interpret on CPU)
     kernel_interpret: bool = True        # no real TPU in this container
+    # XLA work-queue compaction: per-leaf queue capacity as a fraction of the
+    # leaf's stripe count (<= 0 disables; see core/workqueue.py).  Overflow
+    # (checked host-side via queue_fits) falls back to the full masked
+    # recompute, so semantics never change.
+    work_queue_frac: float = workqueue.DEFAULT_QUEUE_FRAC
 
     def __post_init__(self):
         assert self.mode in ("none", "sync", "vilamb"), self.mode
@@ -102,6 +107,13 @@ class RedundancyEngine:
         if config.use_kernels:
             from repro.kernels.redundancy import ops as kops
             self._kernel_ops = kops
+        # Static per-leaf work-queue capacities (0 = plain full recompute).
+        self._queue_caps = {
+            name: 0 if config.use_kernels else workqueue.queue_capacity(
+                meta.n_stripes, config.work_queue_frac)
+            for name, meta in self.metas.items()
+        }
+        self._queue_fits_jit = None
 
     # ------------------------------------------------------------------ utils
     def _shard_factor(self, name: str) -> int:
@@ -160,15 +172,66 @@ class RedundancyEngine:
         return {n: self.specs.get(n, P()) for n in self.metas}
 
     # ------------------------------------------------------------- primitives
-    def _cks_par(self, meta: BlockMeta, lanes, old: LeafRedundancy, bdirty, sdirty):
-        """Masked checksum+parity recompute (ref or Pallas fused kernel)."""
+    def queue_capacity(self, name: str) -> int:
+        """Static work-queue capacity (stripes) for a leaf; 0 = no queue."""
+        return self._queue_caps[name]
+
+    @property
+    def has_queue(self) -> bool:
+        """Whether the queued Algorithm-1 variant exists for this engine.
+
+        Machine-local only: under a mesh the host cannot cheaply check the
+        per-shard fit, so dispatchers always take the reference path.
+        """
+        return self.mesh is None and any(self._queue_caps.values())
+
+    def queue_fits(self, red: RedundancyState) -> bool:
+        """Host-side overflow check: do all live dirty stripes fit the queues?
+
+        One tiny jitted popcount pass over the bitvectors (O(n_blocks) bits,
+        no data read) and a single bool transfer — the cost that buys
+        dispatching the ∝-dirty queued program instead of the full one.
+        """
+        if not self.has_queue:
+            return False
+        if self._queue_fits_jit is None:
+            def fits(red_l):
+                oks = []
+                for name, meta in self.metas.items():
+                    cap = self._queue_caps[name]
+                    if not cap:
+                        continue
+                    r = red_l[name]
+                    bd = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow),
+                                     meta.n_blocks)
+                    sd = self._stripe_dirty(meta, bd)
+                    oks.append(workqueue.stripe_dirty_count(sd) <= cap)
+                return jnp.all(jnp.stack(oks))
+            self._queue_fits_jit = jax.jit(fits)
+        return bool(self._queue_fits_jit(red))
+
+    def _update_leaf(self, name: str, meta: BlockMeta, lanes,
+                     old: LeafRedundancy, bdirty, sdirty, queued: bool):
+        """Masked checksum+parity+meta refresh (Alg. 1 lines 7-22).
+
+        Three interchangeable bitwise-identical realizations: the Pallas
+        fused kernel, the XLA work-queue compaction (cost ∝ dirty stripes;
+        caller guarantees the fit), or the full-region masked recompute.
+        """
         if self._kernel_ops is not None:
-            return self._kernel_ops.fused_update(
+            cks, par = self._kernel_ops.fused_update(
                 lanes, old.checksums, old.parity, bdirty, sdirty,
                 meta.stripe_data_blocks, interpret=self.config.kernel_interpret)
-        cks = jnp.where(bdirty, checksum.block_checksums(lanes), old.checksums)
-        par = parity.stripe_parity_masked(lanes, old.parity, sdirty, meta.stripe_data_blocks)
-        return cks, par
+            return cks, par, checksum.meta_checksum(cks)
+        cap = self._queue_caps[name]
+        if queued and cap:
+            ids, _, _ = workqueue.compact_stripe_ids(sdirty, cap)
+            return workqueue.queued_update(
+                lanes, old.checksums, old.parity, old.meta_ck, bdirty, ids,
+                meta.stripe_data_blocks)
+        return workqueue.full_update(
+            lanes, old.checksums, old.parity, bdirty, sdirty,
+            meta.stripe_data_blocks)
 
     def _stripe_dirty(self, meta: BlockMeta, bdirty):
         padded = jnp.pad(bdirty, (0, meta.padded_blocks - meta.n_blocks))
@@ -219,9 +282,9 @@ class RedundancyEngine:
                     # KV pages) — the event mask IS the block mask.
                     mask = ev
                 else:
-                    flat = ev.reshape(-1)
-                    rows = jnp.nonzero(flat, size=flat.shape[0], fill_value=-1)[0]
-                    mask = blocks.row_block_mask(meta, rows, row_dims=ev.ndim)
+                    # Direct row-mask -> block-mask reduction: no full-event
+                    # nonzero sort, cost tracks the event shape.
+                    mask = blocks.row_mask_block_mask(meta, ev, row_dims=ev.ndim)
                 out[name] = dataclasses.replace(r, dirty=bits.mark(r.dirty, mask))
             return out
 
@@ -255,15 +318,8 @@ class RedundancyEngine:
         return fn(red, arr_events)
 
     # -------------------------------------------------- Algorithm 1 (vilamb)
-    def redundancy_step(
-        self, leaves: Mapping[str, jax.Array], red: RedundancyState
-    ) -> RedundancyState:
-        """One invocation of the paper's background update thread.
-
-        Per leaf: snapshot dirty→shadow, clear dirty, recompute checksums of
-        dirty blocks and parity of stripes containing a dirty block, clear
-        shadow, refresh the meta-checksum. Fences become data dependencies.
-        """
+    def _alg1(self, leaves, red: RedundancyState, queued: bool
+              ) -> RedundancyState:
         def local(ls, red_l):
             out = {}
             for name, meta in self.metas.items():
@@ -275,8 +331,10 @@ class RedundancyEngine:
                 bdirty = bits.unpack(shadow, meta.n_blocks)
                 sdirty = self._stripe_dirty(meta, bdirty)
                 lanes = blocks.to_lanes(ls[name], meta)
-                # Lines 7-18: masked checksum + parity recompute.
-                cks, par = self._cks_par(meta, lanes, r, bdirty, sdirty)
+                # Lines 7-18 + 22: masked checksum + parity recompute, meta
+                # refreshed incrementally on the work-queue path.
+                cks, par, meta_ck = self._update_leaf(
+                    name, meta, lanes, r, bdirty, sdirty, queued)
                 # Lines 19-20: in the paper a fence orders "redundancy written"
                 # before "shadow cleared". Inside one jitted step the returned
                 # state is atomic; crash-atomicity across steps is provided by
@@ -285,12 +343,37 @@ class RedundancyEngine:
                 shadow = jnp.zeros_like(snapshot)
                 out[name] = LeafRedundancy(
                     checksums=cks, parity=par, dirty=dirty, shadow=shadow,
-                    meta_ck=checksum.meta_checksum(cks),  # Line 22
+                    meta_ck=meta_ck,
                 )
             return out
 
         fn = self._wrap(local, [self._leaf_specs_dict()], red_in=True)
         return fn(dict(leaves), red)
+
+    def redundancy_step(
+        self, leaves: Mapping[str, jax.Array], red: RedundancyState
+    ) -> RedundancyState:
+        """One invocation of the paper's background update thread.
+
+        Per leaf: snapshot dirty→shadow, clear dirty, recompute checksums of
+        dirty blocks and parity of stripes containing a dirty block, clear
+        shadow, refresh the meta-checksum. Fences become data dependencies.
+        This is the reference full-region path — safe at any dirty fraction.
+        """
+        return self._alg1(leaves, red, queued=False)
+
+    def redundancy_step_queued(
+        self, leaves: Mapping[str, jax.Array], red: RedundancyState
+    ) -> RedundancyState:
+        """Work-queue Algorithm 1: cost ∝ dirty stripes, not region size.
+
+        Bitwise-identical to :meth:`redundancy_step` **iff** every leaf's
+        dirty-stripe count fits its queue capacity — check
+        :meth:`queue_fits` (host-side) before dispatching, as
+        ``ProtectedStore.tick`` does.  A truncated queue would silently
+        leave stripes stale, so never call this unguarded.
+        """
+        return self._alg1(leaves, red, queued=True)
 
     flush = redundancy_step  # battery/preemption flush = forced update pass
 
@@ -337,9 +420,9 @@ class RedundancyEngine:
 
         The 4 KiB-page-heap fast path (benchmarks, KV pages with
         row-per-block geometry): cost is O(touched rows), not O(leaf).
-        ``rows`` must be unique; duplicates within a stripe are handled by
-        partitioning on the in-stripe slot, so parity deltas XOR-accumulate
-        instead of last-write-wins.
+        ``rows`` must be unique; rows sharing a stripe XOR-accumulate their
+        parity deltas through one segment-XOR scatter (not last-write-wins),
+        and the meta-checksum is updated incrementally from the touched rows.
         """
         meta = self.metas[name]
         assert self.mesh is None, "row fast path is host/local only"
@@ -356,20 +439,14 @@ class RedundancyEngine:
         dck = jax.lax.reduce(
             checksum.fmix32(old_lanes ^ salt) ^ checksum.fmix32(new_lanes ^ salt),
             jnp.uint32(0), jax.lax.bitwise_xor, (1,))
-        cks = r.checksums.at[rows].set(r.checksums[rows] ^ dck)
-        delta = old_lanes ^ new_lanes
-        sid = rows // S
-        par = r.parity
-        # Unique rows sharing a stripe differ in their in-stripe slot, so the
-        # S slot-partitioned scatters each see distinct stripe ids.
-        for j in range(S):
-            sel = (rows % S) == j
-            sid_j = jnp.where(sel, sid, meta.n_stripes)  # OOB -> dropped
-            cur = par.at[sid_j].get(mode="fill", fill_value=0)
-            dj = jnp.where(sel[:, None], delta, 0)
-            par = par.at[sid_j].set(cur ^ dj, mode="drop")
+        old_cks = r.checksums[rows]
+        new_cks = old_cks ^ dck
+        cks = r.checksums.at[rows].set(new_cks)
+        par = parity.scatter_xor_stripes(
+            r.parity, (rows // S).astype(jnp.int32), old_lanes ^ new_lanes)
+        meta_ck = r.meta_ck ^ checksum.meta_checksum_delta(old_cks, new_cks, rows)
         return dataclasses.replace(
-            r, checksums=cks, parity=par, meta_ck=checksum.meta_checksum(cks))
+            r, checksums=cks, parity=par, meta_ck=meta_ck)
 
     # ------------------------------------------------------------- scrubbing
     def scrub(

@@ -37,8 +37,9 @@ def stripe_parity_masked(
 ) -> jax.Array:
     """Recompute parity only for dirty stripes; clean stripes keep old parity.
 
-    This is the reference (pure-jnp) semantics; kernels/redundancy implements
-    the work-queue version that skips the data *read* for clean stripes too.
+    This is the reference (pure-jnp) semantics; the work-queue versions that
+    skip the data *read* for clean stripes too live in core/workqueue.py
+    (XLA gather) and kernels/redundancy (Pallas scalar prefetch).
     """
     fresh = stripe_parity(lanes, stripe_width)
     return jnp.where(stripe_dirty[:, None], fresh, old_parity)
@@ -52,6 +53,37 @@ def parity_diff(old_lanes: jax.Array, new_lanes: jax.Array, stripe_width: int) -
     """
     delta = old_lanes ^ new_lanes
     return stripe_parity(delta, stripe_width)
+
+
+def scatter_xor_stripes(
+    parity: jax.Array, stripe_ids: jax.Array, deltas: jax.Array
+) -> jax.Array:
+    """``parity[s] ^= XOR of deltas with stripe_ids == s`` in one scatter.
+
+    Replaces the slot-partitioned loop of ``stripe_width`` scatters: rows are
+    sorted by stripe id, a segmented XOR scan folds same-stripe deltas, and
+    one unique-id scatter lands the per-segment totals.  Out-of-range ids
+    (``>= n_stripes``) are dropped — use them as padding sentinels.
+    """
+    ns = parity.shape[0]
+    n = stripe_ids.shape[0]
+    if n == 0:
+        return parity
+    order = jnp.argsort(stripe_ids)
+    sid = stripe_ids[order]
+    d = deltas[order]
+
+    def seg_xor(a, b):
+        sa, va = a
+        sb, vb = b
+        return sb, vb ^ jnp.where((sa == sb)[:, None], va, jnp.uint32(0))
+
+    _, folded = jax.lax.associative_scan(seg_xor, (sid, d))
+    is_last = jnp.concatenate(
+        [sid[1:] != sid[:-1], jnp.ones((1,), bool)]) if n > 1 else jnp.ones((1,), bool)
+    tgt = jnp.where(is_last & (sid < ns), sid, ns)
+    cur = parity.at[tgt].get(mode="fill", fill_value=0)
+    return parity.at[tgt].set(cur ^ folded, mode="drop")
 
 
 def reconstruct_block(

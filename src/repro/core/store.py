@@ -32,6 +32,7 @@ import jax
 from repro.common import flatten_dict
 
 from . import policy as policy_mod
+from . import workqueue
 from .blocks import (DEFAULT_LANES_PER_BLOCK, DEFAULT_STRIPE_DATA_BLOCKS,
                      BlockMeta, make_meta)
 from .engine import ALL, RedundancyConfig, RedundancyEngine, _local_shape
@@ -56,6 +57,10 @@ class LeafPolicy:
     scrub_period_steps: int = 0          # 0 = no scheduled scrubbing
     max_vulnerable_steps: int = 0        # freshness deadline, in steps
     max_vulnerable_seconds: float = 0.0  # freshness deadline, wall clock
+    # Work-queue capacity knob (fraction of each leaf's stripes); None
+    # inherits the store-wide RedundancyPolicy.work_queue_frac, <= 0
+    # disables compaction for this group.
+    work_queue_frac: Optional[float] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -78,6 +83,9 @@ class RedundancyPolicy:
     stripe_data_blocks: int = DEFAULT_STRIPE_DATA_BLOCKS
     use_kernels: bool = False
     kernel_interpret: bool = True
+    # Default XLA work-queue capacity (fraction of a leaf's stripe count);
+    # per-group override via LeafPolicy.work_queue_frac.
+    work_queue_frac: float = workqueue.DEFAULT_QUEUE_FRAC
     # Straggler governor: stretch periods under sustained slowdown, shrink
     # back once step times renormalize (the seed's watchdog never recovered).
     straggler_factor: float = 3.0
@@ -246,7 +254,10 @@ class ProtectedStore:
                     lanes_per_block=self.policy.lanes_per_block,
                     stripe_data_blocks=self.policy.stripe_data_blocks,
                     use_kernels=self.policy.use_kernels,
-                    kernel_interpret=self.policy.kernel_interpret)
+                    kernel_interpret=self.policy.kernel_interpret,
+                    work_queue_frac=(
+                        lp.work_queue_frac if lp.work_queue_frac is not None
+                        else self.policy.work_queue_frac))
                 engine = RedundancyEngine(
                     {n: structs[n] for n in names}, cfg, mesh=self.mesh,
                     specs={n: specs[n] for n in names if n in specs})
@@ -271,7 +282,8 @@ class ProtectedStore:
             scrub_period_steps=scrub_period_steps,
             lanes_per_block=cfg.lanes_per_block,
             stripe_data_blocks=cfg.stripe_data_blocks,
-            use_kernels=cfg.use_kernels, kernel_interpret=cfg.kernel_interpret)
+            use_kernels=cfg.use_kernels, kernel_interpret=cfg.kernel_interpret,
+            work_queue_frac=cfg.work_queue_frac)
         store = cls(pol, mesh=engine.mesh)
         if mode == "none":
             store.groups = {}
@@ -401,13 +413,22 @@ class ProtectedStore:
                         "in on_write")
         return out
 
-    def _update_fn(self, label: str):
-        fn = self._jit_update.get(label)
+    def _update_fn(self, label: str, queued: bool = False):
+        key = (label, queued)
+        fn = self._jit_update.get(key)
         if fn is None:
-            fn = jax.jit(self.groups[label].engine.redundancy_step,
-                         donate_argnums=(1,))
-            self._jit_update[label] = fn
+            eng = self.groups[label].engine
+            fn = jax.jit(eng.redundancy_step_queued if queued
+                         else eng.redundancy_step, donate_argnums=(1,))
+            self._jit_update[key] = fn
         return fn
+
+    def _run_update(self, g: _Group, sub, red_sub):
+        """Dispatch Algorithm 1 for one group: queued program when the live
+        dirty stripes fit the work queues (host-side check), full recompute
+        otherwise — bitwise-identical either way."""
+        queued = g.engine.has_queue and g.engine.queue_fits(red_sub)
+        return self._update_fn(g.label, queued)(sub, red_sub)
 
     def _scrub_fn(self, label: str):
         fn = self._jit_scrub.get(label)
@@ -443,6 +464,9 @@ class ProtectedStore:
         report = TickReport(step=step)
         out = dict(red)
         updated, deadline, scrubbed = [], [], []
+        # One clock read and one leaf materialization serve the whole tick;
+        # each group's leaf sub-dict is built at most once even when both its
+        # update and its scrub fire on the same step.
         now = time.monotonic()
         materialized: Optional[Mapping[str, jax.Array]] = (
             None if callable(leaves) else leaves)
@@ -455,6 +479,15 @@ class ProtectedStore:
 
         for g in self._protected():
             lp = g.policy
+            sub: Optional[Dict[str, jax.Array]] = None
+
+            def group_leaves(g=g):
+                nonlocal sub
+                if sub is None:
+                    lv = get_leaves()
+                    sub = {n: lv[n] for n in g.names}
+                return sub
+
             if step < g.last_update_step:
                 # The step counter restarted (new serve wave / fresh run on a
                 # long-lived store): rebase so deadlines keep their meaning.
@@ -469,9 +502,8 @@ class ProtectedStore:
                     or (lp.max_vulnerable_seconds > 0
                         and now - g.last_update_time >= lp.max_vulnerable_seconds))
                 if due or overdue:
-                    sub = {n: get_leaves()[n] for n in g.names}
-                    out.update(self._update_fn(g.label)(
-                        sub, {n: out[n] for n in g.names}))
+                    out.update(self._run_update(
+                        g, group_leaves(), {n: out[n] for n in g.names}))
                     g.last_update_step = step
                     g.last_update_time = now
                     updated.append(g.label)
@@ -479,7 +511,7 @@ class ProtectedStore:
                         deadline.append(g.label)
             sp = scrub_period if scrub_period is not None else lp.scrub_period_steps
             if sp and policy_mod.should_scrub(step, sp):
-                mm, alarms = self._scrub_group(g, get_leaves(), out)
+                mm, alarms = self._scrub_group(g, group_leaves(), out)
                 scrubbed.append(g.label)
                 report.mismatches += mm
                 report.alarms += alarms
@@ -495,12 +527,13 @@ class ProtectedStore:
         Pass ``step`` when known so the steps-based freshness deadline does
         not fire a spurious pass right after the flush."""
         out = dict(red)
+        now = time.monotonic()
         for g in self._protected():
             if g.policy.mode == "vilamb":
-                out.update(self._update_fn(g.label)(
-                    {n: leaves[n] for n in g.names},
+                out.update(self._run_update(
+                    g, {n: leaves[n] for n in g.names},
                     {n: out[n] for n in g.names}))
-                g.last_update_time = time.monotonic()
+                g.last_update_time = now
                 if step is not None:
                     g.last_update_step = int(step)
         return out
@@ -517,9 +550,9 @@ class ProtectedStore:
         return out
 
     # ------------------------------------------------------- verify + recover
-    def _scrub_group(self, g: _Group, leaves, red) -> Tuple[int, int]:
+    def _scrub_group(self, g: _Group, sub, red) -> Tuple[int, int]:
+        """Scrub one group given its leaf sub-dict (double-check protocol)."""
         fn = self._scrub_fn(g.label)
-        sub = {n: leaves[n] for n in g.names}
         red_sub = {n: red[n] for n in g.names}
         mm = fn(sub, red_sub)
         total = int(sum(int(v.sum()) for v in jax.tree.leaves(mm)))
@@ -550,7 +583,7 @@ class ProtectedStore:
         """Scrub all protected groups with the double-check protocol."""
         total = 0
         for g in self._protected():
-            mm, _ = self._scrub_group(g, leaves, red)
+            mm, _ = self._scrub_group(g, {n: leaves[n] for n in g.names}, red)
             total += mm
         return total
 

@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.workqueue import compact_stripe_ids
+
 from ..common import xor_reduce
 from . import ref
 from .redundancy import fused_update_striped
@@ -40,12 +42,10 @@ def fused_update(
     nb, L = lanes2d.shape
     striped = _striped(lanes2d, stripe_width)
     ns = striped.shape[0]
-    # Compact dirty stripe ids into the work queue; pad by repeating the last
-    # live id so trailing grid steps re-address the same block (DMA elided).
-    ids = jnp.nonzero(stripe_dirty, size=ns, fill_value=0)[0].astype(jnp.int32)
-    count = jnp.sum(stripe_dirty, dtype=jnp.int32)
-    last = ids[jnp.maximum(count - 1, 0)]
-    ids = jnp.where(jnp.arange(ns) < count, ids, last)
+    # Compact dirty stripe ids into the work queue (shared helper with the
+    # XLA path); pad by repeating the last live id so trailing grid steps
+    # re-address the same block (DMA elided).
+    ids, count, _ = compact_stripe_ids(stripe_dirty, ns, pad_repeat_last=True)
     par_raw, cks_part = fused_update_striped(
         striped, ids, count[None], interpret=interpret)
     cks_new = xor_reduce(cks_part, (2,)).reshape(ns * stripe_width)[:nb]

@@ -1,0 +1,231 @@
+"""Work-queue compaction path (core/workqueue.py): bitwise identity with the
+reference Algorithm-1 update, overflow dispatch, partial-stripe padding,
+incremental meta-checksums, and the segment-XOR sync row path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import (ALL, ProtectedStore, RedundancyConfig,
+                        RedundancyEngine, RedundancyPolicy, bits, checksum,
+                        workqueue)
+from repro.core import blocks as B
+
+RED_FIELDS = ("checksums", "parity", "dirty", "shadow", "meta_ck")
+
+
+def _mk(frac=0.5, seed=0):
+    """24x200 f32 leaf: 38 blocks, 10 stripes (last one partial: 2 blocks)."""
+    leaves = {
+        "w": jax.random.normal(jax.random.PRNGKey(seed), (24, 200), jnp.float32),
+        "e": jax.random.normal(jax.random.PRNGKey(seed + 1), (16, 64), jnp.bfloat16),
+    }
+    structs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in leaves.items()}
+    eng = RedundancyEngine(structs, RedundancyConfig(
+        lanes_per_block=128, stripe_data_blocks=4, work_queue_frac=frac))
+    return eng, leaves
+
+
+def _assert_red_equal(a, b):
+    for k in a:
+        for f in RED_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a[k], f)), np.asarray(getattr(b[k], f)),
+                err_msg=f"{k}.{f}")
+
+
+def test_queue_capacity_derivation():
+    eng, _ = _mk(frac=0.5)
+    assert eng.metas["w"].n_stripes == 10
+    assert eng.queue_capacity("w") == 5           # ceil(10 * 0.5)
+    assert eng.queue_capacity("e") == 0           # 1 stripe: queue pointless
+    assert eng.has_queue
+    eng_off, _ = _mk(frac=0.0)
+    assert not eng_off.has_queue
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_queued_bitwise_identical_random_masks(seed):
+    """Compacted and reference redundancy_step agree bitwise for random
+    dirty block masks that fit the queue (incl. the padded last stripe)."""
+    eng, leaves = _mk(frac=0.5)
+    red = eng.init(leaves)
+    rng = np.random.default_rng(seed)
+    # <= 5 dirty stripes on w (fits capacity 5); random row events on e
+    # (capacity 0 there: always full path, must still agree)
+    stripes = rng.choice(10, size=rng.integers(0, 6), replace=False)
+    bmask = np.zeros((38,), bool)
+    for s in stripes:
+        blks = np.arange(s * 4, min((s + 1) * 4, 38))
+        bmask[rng.choice(blks, size=rng.integers(1, len(blks) + 1),
+                         replace=False)] = True
+    red = eng.mark_dirty(red, {"e": jnp.asarray(rng.random(16) < 0.3)})
+    red = {"w": dataclasses.replace(
+        red["w"], dirty=bits.mark(red["w"].dirty, jnp.asarray(bmask))),
+        "e": red["e"]}
+    leaves2 = {k: v + 1 for k, v in leaves.items()}
+    assert eng.queue_fits(red)
+    _assert_red_equal(eng.redundancy_step_queued(leaves2, red),
+                      eng.redundancy_step(leaves2, red))
+
+
+def test_partial_last_stripe_queued():
+    """Dirty bits in the padded last stripe (2 of 4 member blocks exist)."""
+    eng, leaves = _mk(frac=0.5)
+    red = eng.init(leaves)
+    bmask = jnp.zeros((38,), bool).at[jnp.array([36, 37])].set(True)
+    red = {"w": dataclasses.replace(
+        red["w"], dirty=bits.mark(red["w"].dirty, bmask)), "e": red["e"]}
+    # mutate only data inside the marked blocks (elem 4750 -> lane 4750
+    # -> block 37), so clean blocks stay scrub-consistent
+    leaves2 = dict(leaves, w=leaves["w"].at[23, 150].add(2.0))
+    assert eng.queue_fits(red)
+    out_q = eng.redundancy_step_queued(leaves2, red)
+    _assert_red_equal(out_q, eng.redundancy_step(leaves2, red))
+    # postcondition: scrub-clean and verifiable meta
+    assert all(int(v.sum()) == 0 for v in eng.scrub(leaves2, out_q).values())
+    assert all(bool(v) for v in eng.verify_meta(out_q).values())
+
+
+def test_queue_overflow_detected_and_full_fallback():
+    """fits==False past capacity; the store then dispatches the reference
+    program, so state stays bitwise-identical to a no-queue engine."""
+    eng, leaves = _mk(frac=0.5)
+    red = eng.init(leaves)
+    red_all = eng.mark_dirty(red, {"w": ALL, "e": ALL})
+    assert not eng.queue_fits(red_all)            # 10 stripes > capacity 5
+    # boundary: exactly capacity stripes still fits
+    bmask = jnp.zeros((38,), bool).at[jnp.arange(5) * 4].set(True)
+    red_fit = {"w": dataclasses.replace(
+        red["w"], dirty=bits.mark(red["w"].dirty, bmask)), "e": red["e"]}
+    assert eng.queue_fits(red_fit)
+
+    pol_q = RedundancyPolicy.single("vilamb", period_steps=1,
+                                    lanes_per_block=128, work_queue_frac=0.5)
+    pol_f = RedundancyPolicy.single("vilamb", period_steps=1,
+                                    lanes_per_block=128, work_queue_frac=0.0)
+    leaves2 = {k: v + 3 for k, v in leaves.items()}
+    outs = []
+    for pol in (pol_q, pol_f):
+        store = ProtectedStore(pol).attach(leaves)
+        r0 = store.init(leaves)
+        r0 = store.on_write(r0, events={"w": ALL, "e": ALL})  # overflow
+        r1, rep = store.tick(leaves2, r0, 1)
+        assert rep.updated
+        outs.append(r1)
+    _assert_red_equal(outs[0], outs[1])
+
+
+def test_store_tick_dispatches_queued_and_matches_reference():
+    """Sparse dirty state through store.tick (queued dispatch) must equal a
+    work-queue-disabled store byte for byte."""
+    _, leaves = _mk()
+    ev = jnp.zeros((24,), bool).at[jnp.array([0, 7])].set(True)
+    # only the marked rows change (dirty tracking must cover every write)
+    leaves2 = dict(leaves, w=leaves["w"].at[jnp.array([0, 7])].add(-0.5))
+    outs = []
+    for frac in (0.5, 0.0):
+        pol = RedundancyPolicy.single("vilamb", period_steps=1,
+                                      lanes_per_block=128,
+                                      work_queue_frac=frac)
+        store = ProtectedStore(pol).attach(leaves)
+        r0 = store.init(leaves)
+        r0 = store.on_write(r0, events={"w": ev})
+        r1, rep = store.tick(leaves2, r0, 1)
+        assert rep.updated
+        outs.append(r1)
+        assert sum(int(v.sum()) for v in store.scrub(leaves2, r1).values()) == 0
+    _assert_red_equal(outs[0], outs[1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_incremental_meta_checksum_matches_full(seed):
+    """meta ^ meta_checksum_delta(changed) == full rehash, bitwise."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 200))
+    cks = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    k = int(rng.integers(0, n + 1))
+    idx = rng.choice(n, size=k, replace=False).astype(np.int32)
+    new_vals = jnp.asarray(rng.integers(0, 2**32, size=k, dtype=np.uint32))
+    cks2 = cks.at[jnp.asarray(idx)].set(new_vals) if k else cks
+    meta0 = checksum.meta_checksum(cks)
+    delta = checksum.meta_checksum_delta(
+        cks[jnp.asarray(idx)], new_vals, jnp.asarray(idx)) if k else jnp.uint32(0)
+    np.testing.assert_array_equal(
+        np.asarray(meta0 ^ delta), np.asarray(checksum.meta_checksum(cks2)))
+
+
+def test_sync_update_rows_duplicate_stripe_regression():
+    """Unique rows sharing a stripe must XOR-accumulate parity deltas (the
+    segment-XOR scatter), matching the dense sync_update oracle — including
+    the incremental meta-checksum; order of rows must not matter."""
+    heap = jax.random.normal(jax.random.PRNGKey(2), (16, 32), jnp.float32)
+    eng = RedundancyEngine(
+        {"h": jax.ShapeDtypeStruct(heap.shape, heap.dtype)},
+        RedundancyConfig(mode="sync", lanes_per_block=32, stripe_data_blocks=4))
+    red = eng.init({"h": heap})
+    for rows in ([0, 1, 2, 9], [9, 2, 0, 1], [4, 5, 6, 7], [15]):
+        rows = jnp.asarray(rows, jnp.int32)
+        new_rows = heap[rows] + 3.0
+        new_heap = heap.at[rows].set(new_rows)
+        got = eng.sync_update_rows("h", red["h"], rows, heap[rows], new_rows)
+        want = eng.sync_update({"h": heap}, {"h": new_heap}, red)["h"]
+        np.testing.assert_array_equal(np.asarray(got.checksums),
+                                      np.asarray(want.checksums))
+        np.testing.assert_array_equal(np.asarray(got.parity),
+                                      np.asarray(want.parity))
+        np.testing.assert_array_equal(np.asarray(got.meta_ck),
+                                      np.asarray(want.meta_ck))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_row_mask_block_mask_matches_nonzero_oracle(seed):
+    """mark_dirty's direct row->block reduction == nonzero + row_block_mask
+    across straddling and packed row geometries."""
+    rng = np.random.default_rng(seed)
+    for shape, lanes in (((24, 200), 128), ((16, 64), 128), ((7, 130), 128),
+                         ((5, 7, 11), 64), ((64, 32), 128)):
+        meta = B.make_meta(jax.ShapeDtypeStruct(shape, jnp.float32),
+                           lanes_per_block=lanes, stripe_data_blocks=4)
+        m = rng.random(shape[0]) < rng.random()
+        got = B.row_mask_block_mask(meta, jnp.asarray(m), row_dims=1)
+        ids = (jnp.asarray(np.flatnonzero(m).astype(np.int32))
+               if m.any() else jnp.asarray([-1], jnp.int32))
+        want = B.row_block_mask(meta, ids, row_dims=1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{shape} lanes={lanes}")
+
+
+def test_compact_stripe_ids_contract():
+    sd = jnp.asarray([False, True, False, True, True, False])
+    ids, count, overflow = workqueue.compact_stripe_ids(sd, 4)
+    assert ids.tolist() == [1, 3, 4, 6] and int(count) == 3 and not bool(overflow)
+    ids, count, overflow = workqueue.compact_stripe_ids(sd, 2)
+    assert int(count) == 3 and bool(overflow)
+    # kernel convention: pad by repeating the last live id
+    ids, count, _ = workqueue.compact_stripe_ids(sd, 6, pad_repeat_last=True)
+    assert ids.tolist() == [1, 3, 4, 4, 4, 4]
+
+
+def test_queued_preserves_scrub_detection():
+    """After a queued pass, corruption of a *clean* block is still caught —
+    checksums of untouched blocks must not be disturbed by the scatter."""
+    eng, leaves = _mk(frac=0.5)
+    red = eng.init(leaves)
+    red = eng.mark_dirty(red, {"w": jnp.zeros((24,), bool).at[0].set(True)})
+    leaves2 = dict(leaves, w=leaves["w"].at[0, 0].add(1.0))
+    red = eng.redundancy_step_queued(leaves2, red)
+    meta = eng.metas["w"]
+    lanes = B.to_lanes(leaves2["w"], meta)
+    corrupted = B.from_lanes(lanes.at[20, 3].add(99), meta)
+    mm = eng.scrub(dict(leaves2, w=corrupted), red)
+    assert np.flatnonzero(np.asarray(mm["w"])).tolist() == [20]
