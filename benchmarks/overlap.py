@@ -1,0 +1,99 @@
+"""Overlap pipeline: what the redundancy path costs the foreground thread.
+
+The paper's headline is *asynchronous* redundancy — background updates
+overlapped with foreground writes.  The quantity the overlap pipeline
+changes is the **foreground stall**: the time the application thread spends
+inside ``store.tick`` per step.  The blocking tick (PR2, ``async_tick=
+False``) pays a host-side ``queue_fits`` round trip on every due tick,
+which drains the whole dispatch pipeline before the update can even
+launch; the overlap-pipelined tick (PR3 default) costs one speculative
+dispatch plus a non-blocking flag read.
+
+Measured per step over a write+tick loop at period 4:
+
+  * ``overlap/tick_stall_*``  — mean host time inside ``tick`` (the
+    foreground redundancy overhead; p99 in ``derived`` shows the due-tick
+    spike).  **Headline**: ``overlap/overhead_reduction`` is the ratio of
+    blocking vs pipelined stall over the ``none`` baseline — the
+    acceptance bar is >= 2x.
+  * ``overlap/endtoend_*``    — full wall clock per step, for context.  On
+    this repo's 2-core CPU container the "device" shares cores with the
+    host and the two variants execute bitwise-identical update programs,
+    so end-to-end wall is device-bound and near-equal here; on an
+    accelerator (device compute does not steal host cycles) the stall
+    difference converts 1:1 into step time.
+
+Both variants settle and drain every dispatched update inside the timed
+window, so the comparison is work-for-work fair.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ROW_ELEMS, Region, key_stream
+
+
+def _measure(mode: str, pipelined: bool, steps: int, n_rows: int,
+             batch: int, period: int):
+    r = Region(n_rows=n_rows, mode=mode, period=period, pipelined=pipelined)
+    keys = key_stream("uniform", steps + 1, batch, n_rows)
+    vals = jnp.ones((batch, ROW_ELEMS), jnp.float32)
+    heap, red = r.heap, r.red
+    heap, red = r.write(heap, red, keys[0], vals)
+    if r.store.has_periodic:
+        red = r.store.flush({"heap": heap}, red)
+    jax.block_until_ready(heap)
+    ticks = []
+    t0 = time.perf_counter()
+    for i, rows in enumerate(keys[1:], 1):
+        heap, red = r.write(heap, red, rows, vals)
+        s0 = time.perf_counter()
+        red, _ = r.store.tick({"heap": heap}, red, i)
+        ticks.append(time.perf_counter() - s0)
+    red = r.store.settle(red, {"heap": heap})
+    jax.block_until_ready((heap, jax.tree.leaves(red)))
+    wall_us = (time.perf_counter() - t0) / steps * 1e6
+    t = np.asarray(ticks) * 1e6
+    return float(t.mean()), float(np.percentile(t, 99)), wall_us
+
+
+def run(steps: int = 240, n_rows: int = 4096, batch: int = 32,
+        period: int = 4, repeats: int = 2):
+    best = {}
+    for name, mode, pipelined in (("none", "none", True),
+                                  ("blocking", "vilamb", False),
+                                  ("pipelined", "vilamb", True)):
+        runs = [_measure(mode, pipelined, steps, n_rows, batch, period)
+                for _ in range(repeats)]
+        best[name] = min(runs, key=lambda x: x[0])   # least-noise run
+    n, b, p = best["none"], best["blocking"], best["pipelined"]
+    # Floor both stalls at the timer/scheduler noise level so a lucky run
+    # where the pipelined mean dips below the baseline cannot report an
+    # unbounded (meaningless) reduction.
+    noise_us = 5.0
+    stall_blk = max(b[0] - n[0], noise_us)
+    stall_pipe = max(p[0] - n[0], noise_us)
+    ratio = stall_blk / stall_pipe
+    return [
+        ("overlap/tick_stall_none", n[0], f"p99 {n[1]:.0f} us (baseline)"),
+        ("overlap/tick_stall_blocking", b[0],
+         f"p99 {b[1]:.0f} us; queue_fits round trip each due tick"),
+        ("overlap/tick_stall_pipelined", p[0],
+         f"p99 {p[1]:.0f} us; sync-free speculative dispatch"),
+        ("overlap/overhead_reduction", 0.0,
+         f"{ratio:.2f}x foreground stall cut (bar: >= 2x)"),
+        ("overlap/endtoend_none", n[2], "wall us/step"),
+        ("overlap/endtoend_blocking", b[2],
+         "wall us/step (device-bound on shared-CPU container)"),
+        ("overlap/endtoend_pipelined", p[2],
+         "wall us/step (identical device work by construction)"),
+    ]
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run())

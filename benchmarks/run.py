@@ -34,6 +34,7 @@ SMOKE_KW = {
     # fig9a capped at 4096 rows; the fig9c sweep keeps its representative
     # region size (sweep_rows default) even in smoke mode — see dirty_cost.
     "dirty_cost": dict(n_rows=4096, iters=10),
+    "overlap": dict(steps=120, n_rows=2048, batch=32, repeats=2),
     "battery": dict(n_rows=1024),
     "mttdl_bench": dict(n_rows=1024, steps=12),
     "kernel_bench": dict(nb=128, L=512),
@@ -67,8 +68,8 @@ def main(argv=None) -> None:
     args = p.parse_args(argv)
 
     from . import (battery, dirty_cost, fio_patterns, insert_throughput,
-                   kernel_bench, mttdl_bench, op_latency, overwrite_scaling,
-                   roofline, ycsb)
+                   kernel_bench, mttdl_bench, op_latency, overlap,
+                   overwrite_scaling, roofline, ycsb)
     from .common import emit
 
     modules = [
@@ -78,6 +79,7 @@ def main(argv=None) -> None:
         ("fig7 overwrite scaling", overwrite_scaling),
         ("fig8 fio patterns", fio_patterns),
         ("fig9 dirty-bit cost", dirty_cost),
+        ("overlap pipeline", overlap),
         ("sec4.7 battery", battery),
         ("sec4.8 mttdl", mttdl_bench),
         ("kernel fusion", kernel_bench),

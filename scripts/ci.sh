@@ -18,12 +18,17 @@ echo "== [2/3] tier-1 test suite =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
-  echo "== [3/3] smoke benchmark (tiny shapes) + perf artifact =="
+  echo "== [3/3] smoke benchmark (tiny shapes) + perf artifact + guard =="
   # insert_throughput exercises all three policies; dirty_cost sweeps the
-  # work-queue dirty-fraction scaling.  The JSON artifact (BENCH_PR2.json)
-  # is the machine-readable perf trajectory — see docs/perf.md.
+  # work-queue dirty-fraction scaling; overlap measures the pipelined vs
+  # blocking tick.  The JSON artifact (BENCH_PR3.json) is the
+  # machine-readable perf trajectory — see docs/perf.md.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
-      --smoke --only insert_throughput,dirty_cost \
-      --json "${BENCH_JSON:-BENCH_PR2.json}"
+      --smoke --only insert_throughput,dirty_cost,overlap \
+      --json "${BENCH_JSON:-BENCH_PR3.json}"
+  # Regression guard: compare key rows against the prior checked-in
+  # artifact; >2x slowdowns fail the build (BENCH_GUARD_TOL overrides).
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/bench_guard.py \
+      "${BENCH_JSON:-BENCH_PR3.json}" --baseline BENCH_PR2.json
 fi
 echo "== CI OK =="

@@ -129,6 +129,18 @@ def from_lanes(lanes: jax.Array, meta: BlockMeta) -> jax.Array:
     return out[: meta.n_elems].reshape(meta.shape)
 
 
+def stripe_dirty_mask(meta: BlockMeta, block_dirty: jax.Array) -> jax.Array:
+    """bool[n_stripes] of stripes containing at least one dirty block.
+
+    The block->stripe reduction of Algorithm 1 (a stripe's parity is stale
+    iff any member block is dirty); shared by the update programs, the
+    fit check, and the accounting paths.
+    """
+    padded = jnp.pad(block_dirty, (0, meta.padded_blocks - meta.n_blocks))
+    return jnp.any(padded.reshape(meta.n_stripes, meta.stripe_data_blocks),
+                   axis=1)
+
+
 def block_of_index(meta: BlockMeta, flat_elem_index) -> jax.Array:
     """Block id containing a flat element index (for sparse dirty marking)."""
     lane = flat_elem_index // meta.elems_per_word

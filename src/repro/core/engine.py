@@ -205,7 +205,7 @@ class RedundancyEngine:
                     bd = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow),
                                      meta.n_blocks)
                     sd = self._stripe_dirty(meta, bd)
-                    oks.append(workqueue.stripe_dirty_count(sd) <= cap)
+                    oks.append(workqueue.stripe_fits(sd, cap))
                 return jnp.all(jnp.stack(oks))
             self._queue_fits_jit = jax.jit(fits)
         return bool(self._queue_fits_jit(red))
@@ -234,8 +234,7 @@ class RedundancyEngine:
             meta.stripe_data_blocks)
 
     def _stripe_dirty(self, meta: BlockMeta, bdirty):
-        padded = jnp.pad(bdirty, (0, meta.padded_blocks - meta.n_blocks))
-        return jnp.any(padded.reshape(meta.n_stripes, meta.stripe_data_blocks), axis=1)
+        return blocks.stripe_dirty_mask(meta, bdirty)
 
     # -------------------------------------------------------------- init
     def init(self, leaves: Mapping[str, jax.Array]) -> RedundancyState:
@@ -318,31 +317,51 @@ class RedundancyEngine:
         return fn(red, arr_events)
 
     # -------------------------------------------------- Algorithm 1 (vilamb)
+    def _alg1_parts(self, ls, red_l, queued: bool, want_fits: bool):
+        """Shared Algorithm-1 body (traceable): per-leaf masked update.
+
+        Lines 2-4: snapshot ``dirty | shadow`` (include leftover shadow
+        from a crash); lines 7-18 + 22: masked checksum + parity recompute
+        with the meta-checksum refreshed incrementally on the work-queue
+        path.  Returns ``({name: (cks, par, meta_ck, snapshot)}, fits)``
+        — the blocking and overlap entry points differ only in how they
+        fold these into dirty/shadow outputs.  ``fits`` (the device-side
+        queue-fit predicate over every queued leaf) is only evaluated when
+        requested.
+        """
+        parts: Dict[str, Tuple] = {}
+        fits = []
+        for name, meta in self.metas.items():
+            r = red_l[name]
+            snapshot = jnp.bitwise_or(r.dirty, r.shadow)
+            bdirty = bits.unpack(snapshot, meta.n_blocks)
+            sdirty = self._stripe_dirty(meta, bdirty)
+            cap = self._queue_caps[name]
+            if want_fits and cap:
+                fits.append(workqueue.stripe_fits(sdirty, cap))
+            lanes = blocks.to_lanes(ls[name], meta)
+            cks, par, meta_ck = self._update_leaf(
+                name, meta, lanes, r, bdirty, sdirty, queued)
+            parts[name] = (cks, par, meta_ck, snapshot)
+        fits_all = jnp.all(jnp.stack(fits)) if fits else jnp.asarray(True)
+        return parts, fits_all
+
     def _alg1(self, leaves, red: RedundancyState, queued: bool
               ) -> RedundancyState:
         def local(ls, red_l):
+            parts, _ = self._alg1_parts(ls, red_l, queued, want_fits=False)
             out = {}
-            for name, meta in self.metas.items():
-                r = red_l[name]
-                # Line 2-4: snapshot (include leftover shadow from a crash).
-                snapshot = jnp.bitwise_or(r.dirty, r.shadow)
-                shadow = snapshot                      # persisted shadow copy
-                dirty = jnp.zeros_like(r.dirty)        # Line 6: clear
-                bdirty = bits.unpack(shadow, meta.n_blocks)
-                sdirty = self._stripe_dirty(meta, bdirty)
-                lanes = blocks.to_lanes(ls[name], meta)
-                # Lines 7-18 + 22: masked checksum + parity recompute, meta
-                # refreshed incrementally on the work-queue path.
-                cks, par, meta_ck = self._update_leaf(
-                    name, meta, lanes, r, bdirty, sdirty, queued)
-                # Lines 19-20: in the paper a fence orders "redundancy written"
-                # before "shadow cleared". Inside one jitted step the returned
-                # state is atomic; crash-atomicity across steps is provided by
-                # the checkpoint layer persisting (data, cks, par, shadow)
-                # together. Clearing shadow here is therefore safe.
-                shadow = jnp.zeros_like(snapshot)
+            for name, (cks, par, meta_ck, snapshot) in parts.items():
+                # Lines 19-20: in the paper a fence orders "redundancy
+                # written" before "shadow cleared". Inside one jitted step
+                # the returned state is atomic; crash-atomicity across steps
+                # is provided by the checkpoint layer persisting (data, cks,
+                # par, shadow) together. Clearing shadow (line 6 cleared
+                # dirty) is therefore safe.
                 out[name] = LeafRedundancy(
-                    checksums=cks, parity=par, dirty=dirty, shadow=shadow,
+                    checksums=cks, parity=par,
+                    dirty=jnp.zeros_like(snapshot),
+                    shadow=jnp.zeros_like(snapshot),
                     meta_ck=meta_ck,
                 )
             return out
@@ -376,6 +395,49 @@ class RedundancyEngine:
         return self._alg1(leaves, red, queued=True)
 
     flush = redundancy_step  # battery/preemption flush = forced update pass
+
+    # ------------------------------------------- Algorithm 1, overlap form
+    def redundancy_step_async(
+        self, leaves: Mapping[str, jax.Array], red: RedundancyState,
+        queued: bool = False,
+    ) -> Tuple[RedundancyState, jax.Array]:
+        """Algorithm 1 restructured for sync-free overlapped dispatch.
+
+        Same snapshot-merge and per-leaf math as :meth:`redundancy_step` /
+        :meth:`redundancy_step_queued` — one donated in-place program — but
+        returning ``(red_out, fits)`` so no host check guards adoption:
+
+        * ``fits`` is the device-computed queue-fit predicate
+          (``queue_fits`` without the host round trip); the dispatcher
+          fetches it via a non-blocking async copy and uses it one tick
+          ahead as the speculation signal for the *next* queued-vs-full
+          choice, and retrospectively as the overflow flag for *this* one.
+        * The returned state is valid **unconditionally**.  Under
+          ``queued=True`` the scattered checksums/parity are correct fresh
+          values for every stripe that made the queue; ``red_out.shadow``
+          is ``where(overflowed, snapshot, 0)``, so on overflow everything
+          the truncated queue may have missed stays conservatively marked
+          (epoch A survives in shadow) until the dispatcher runs the
+          full-recompute fallback.  ``red_out.dirty`` is the fresh epoch-B
+          bitmap the foreground's next ``on_write`` marks into.
+          :meth:`redundancy_step_queued`'s "never unguarded" contract is
+          thus discharged on device.
+
+        Machine-local only — under a mesh use the blocking path.
+        """
+        assert self.mesh is None, "overlap Algorithm 1 is machine-local"
+        parts, fits_all = self._alg1_parts(leaves, red, queued, want_fits=True)
+        overflowed = jnp.logical_not(fits_all) if queued else jnp.asarray(False)
+        out: RedundancyState = {}
+        for name, (cks, par, meta_ck, snapshot) in parts.items():
+            out[name] = LeafRedundancy(
+                checksums=cks, parity=par,
+                dirty=jnp.zeros_like(snapshot),
+                shadow=jnp.where(overflowed, snapshot,
+                                 jnp.zeros_like(snapshot)),
+                meta_ck=meta_ck,
+            )
+        return out, fits_all
 
     # ----------------------------------------------------- sync (Pangolin)
     def sync_update(

@@ -28,15 +28,18 @@ import warnings
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.common import flatten_dict
 
+from . import bits
 from . import policy as policy_mod
 from . import workqueue
 from .blocks import (DEFAULT_LANES_PER_BLOCK, DEFAULT_STRIPE_DATA_BLOCKS,
                      BlockMeta, make_meta)
 from .engine import ALL, RedundancyConfig, RedundancyEngine, _local_shape
-from .state import RedundancyState
+from .state import LeafRedundancy, RedundancyState, leaf_red_struct
 
 MODES = ("none", "sync", "vilamb")
 
@@ -92,6 +95,17 @@ class RedundancyPolicy:
     straggler_window: int = 20
     straggler_recovery_steps: int = 10
     period_cap: int = 4096
+    # Overlap pipeline (docs/perf.md): a due tick costs the foreground one
+    # dispatch, never a device->host round trip.  ``async_tick=False`` or
+    # ``pipeline_depth=0`` reverts to the blocking tick (exact host-side
+    # queue_fits dispatch); depth counts in-flight updates per group — 1 is
+    # the implemented maximum, deeper requests coalesce.  Mesh-sharded
+    # groups always take the blocking path.
+    async_tick: bool = True
+    pipeline_depth: int = 1
+    # AOT-compile every Algorithm-1 variant a group can dispatch at attach
+    # time, so the first overlapped dispatch never hides a compile stall.
+    precompile: bool = True
 
     def leaf_policy(self, name: str) -> LeafPolicy:
         for pattern, lp in self.rules:
@@ -183,6 +197,37 @@ class TickReport:
     scrubbed: Tuple[str, ...] = ()
     mismatches: int = 0
     alarms: int = 0
+    # Overlap pipeline observability: due ticks folded into a still-in-flight
+    # update, and groups whose speculative queued dispatch overflowed (the
+    # full-recompute fallback ran on resolution).
+    coalesced: Tuple[str, ...] = ()
+    overflowed: Tuple[str, ...] = ()
+
+
+def _ready(x) -> bool:
+    """Non-blocking readiness probe for a dispatched jax array."""
+    try:
+        return bool(x.is_ready())
+    except AttributeError:      # non-jax stand-ins (tests) are always ready
+        return True
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One in-flight overlapped Algorithm-1 update (per group).
+
+    ``red`` holds the program's output arrays (futures until the device
+    finishes); ``fits`` is the device-computed queue-fit predicate, with a
+    host copy already in flight (``copy_to_host_async``).  Resolution
+    adopts the outputs into the live view, feeds ``fits`` forward as the
+    next speculation signal and, for a queued dispatch that overflowed,
+    triggers the full-recompute fallback.
+    """
+    red: Dict[str, Any]
+    fits: Any
+    queued: bool
+    step: int
+    coalesced: int = 0
 
 
 @dataclasses.dataclass
@@ -193,6 +238,13 @@ class _Group:
     engine: Optional[RedundancyEngine]     # None for mode == "none"
     last_update_step: int = 0
     last_update_time: float = dataclasses.field(default_factory=time.monotonic)
+    # Overlap-pipeline state: at most one in-flight update, plus the
+    # speculation signal (did the last consumed snapshot fit the queues?).
+    # Pessimistic start: the full program is always correct, and the first
+    # due tick after attach often carries a large dirty set; the first
+    # resolved fit signal (or a flush's exact check) flips it.
+    pending: Optional[_Pending] = None
+    predicted_fits: bool = False
 
 
 # ---------------------------------------------------------------------- store
@@ -215,8 +267,9 @@ class ProtectedStore:
             factor=self.policy.straggler_factor,
             window=self.policy.straggler_window,
             recovery_steps=self.policy.straggler_recovery_steps)
-        self._jit_update: Dict[str, Any] = {}
+        self._jit_update: Dict[Tuple[str, str], Any] = {}
         self._jit_scrub: Dict[str, Any] = {}
+        self._jit_misc: Dict[Tuple[str, str], Any] = {}
 
     # ------------------------------------------------------------ construction
     def attach(self, tree: Any, specs: Optional[Mapping[str, Any]] = None
@@ -264,6 +317,9 @@ class ProtectedStore:
             self.groups[label] = _Group(label, lp, tuple(names), engine)
         self._jit_update = {}
         self._jit_scrub = {}
+        self._jit_misc = {}
+        if self.policy.precompile:
+            self.warmup()
         return self
 
     @classmethod
@@ -413,22 +469,207 @@ class ProtectedStore:
                         "in on_write")
         return out
 
-    def _update_fn(self, label: str, queued: bool = False):
-        key = (label, queued)
+    # --------------------------------------------------- dispatch machinery
+    def _async_group(self, g: _Group) -> bool:
+        """Does this group take the overlap-pipelined tick path?"""
+        return (g.engine is not None and g.policy.mode == "vilamb"
+                and self.policy.async_tick and self.policy.pipeline_depth > 0
+                and g.engine.mesh is None)
+
+    def _build_update(self, label: str, variant: str):
+        """Un-lowered jitted Algorithm-1 program for one group.
+
+        Variants: ``full`` / ``queued`` — the blocking programs (input red
+        donated in place; used by ``flush`` and the blocking tick);
+        ``async_full`` / ``async_queued`` — the overlap programs
+        ``(leaves, red) -> (red, fits)``.  The overlap programs donate
+        **nothing**: on this backend a donated dispatch blocks the host
+        until its donated inputs are defined, so in-place updates would
+        re-serialize the very pipeline the overlap exists to free.  The
+        old epoch's arrays instead stay alive as the double buffer (the
+        foreground keeps dispatching against them) and the program's
+        outputs are adopted at resolution.
+        """
+        eng = self.groups[label].engine
+        if variant == "full":
+            return jax.jit(eng.redundancy_step, donate_argnums=(1,))
+        if variant == "queued":
+            return jax.jit(eng.redundancy_step_queued, donate_argnums=(1,))
+        assert variant in ("async_full", "async_queued"), variant
+        q = variant == "async_queued"
+        return jax.jit(
+            lambda lv, rd, e=eng: e.redundancy_step_async(lv, rd, queued=q))
+
+    def _update_fn(self, label: str, variant: str):
+        key = (label, variant)
         fn = self._jit_update.get(key)
         if fn is None:
-            eng = self.groups[label].engine
-            fn = jax.jit(eng.redundancy_step_queued if queued
-                         else eng.redundancy_step, donate_argnums=(1,))
-            self._jit_update[key] = fn
+            fn = self._jit_update[key] = self._build_update(label, variant)
         return fn
 
-    def _run_update(self, g: _Group, sub, red_sub):
-        """Dispatch Algorithm 1 for one group: queued program when the live
-        dirty stripes fit the work queues (host-side check), full recompute
-        otherwise — bitwise-identical either way."""
+    def warmup(self) -> "ProtectedStore":
+        """AOT-compile every Algorithm-1 variant each group can dispatch.
+
+        Runs at ``attach`` time (``RedundancyPolicy.precompile``) so the
+        first due tick never hides a compile stall: both the queued and the
+        full program are ready before the first overlapped dispatch.  This
+        was the `fig1_insert` threads8 collapse — warmup traffic fit the
+        work queue, steady state overflowed, and the full variant's ~200 ms
+        compile landed inside the measured loop.  Machine-local groups
+        only; returns ``self`` for chaining.
+        """
+        for g in self._protected():
+            if g.policy.mode != "vilamb" or g.engine.mesh is not None:
+                continue
+            eng = g.engine
+            leaf_structs = {
+                n: jax.ShapeDtypeStruct(eng.metas[n].shape,
+                                        jnp.dtype(eng.metas[n].dtype))
+                for n in g.names}
+            red_structs = {n: leaf_red_struct(eng.metas[n]) for n in g.names}
+            # Async groups also warm the blocking pair: flush (the
+            # latency-critical preemption path) still dispatches it.
+            variants = (("async_full", "async_queued", "full", "queued")
+                        if self._async_group(g) else ("full", "queued"))
+            for variant in variants:
+                if "queued" in variant and not eng.has_queue:
+                    continue
+                key = (g.label, variant)
+                if key in self._jit_update:
+                    continue
+                self._jit_update[key] = self._build_update(
+                    g.label, variant).lower(leaf_structs, red_structs).compile()
+            if self._async_group(g):
+                # Warm the epoch-swap helper too (it compiles on first use
+                # otherwise — a ~50 ms stall inside the first overlapped
+                # dispatch).  A real call on the tiny bitvectors both
+                # compiles it and keeps the fast C++ dispatch path.
+                words = {n: bits.zeros(eng.metas[n].n_blocks)
+                         for n in g.names}
+                jax.block_until_ready(self._swap_fn(g.label)(words, words))
+        return self
+
+    def _dispatch_blocking(self, g: _Group, sub, red_sub):
+        """Blocking dispatch (flush / legacy tick / mesh groups): queued
+        program when the live dirty stripes fit the work queues — an exact,
+        host-side ``queue_fits`` round trip — full recompute otherwise;
+        bitwise-identical either way.  The exact fit answer doubles as a
+        free speculation seed for later overlapped dispatches."""
         queued = g.engine.has_queue and g.engine.queue_fits(red_sub)
-        return self._update_fn(g.label, queued)(sub, red_sub)
+        g.predicted_fits = queued or not g.engine.has_queue
+        return self._update_fn(g.label, "queued" if queued else "full")(
+            sub, red_sub)
+
+    def _swap_fn(self, label: str):
+        """One-dispatch epoch swap for the live view: per leaf, the epoch-A
+        snapshot (``dirty | shadow``, becomes the live ``shadow``) and a
+        fresh zero epoch-B bitmap (becomes the live ``dirty``).
+
+        Not donated: its inputs are usually still being produced by the
+        step just dispatched, and a donated dispatch would block on them.
+        """
+        key = (label, "swap")
+        fn = self._jit_misc.get(key)
+        if fn is None:
+            names = self.groups[label].names
+
+            def swap(dirty, shadow):
+                snaps = {n: jnp.bitwise_or(dirty[n], shadow[n]) for n in names}
+                fresh = {n: jnp.zeros_like(dirty[n]) for n in names}
+                return snaps, fresh
+
+            fn = self._jit_misc[key] = jax.jit(swap)
+        return fn
+
+    def _dispatch_async(self, g: _Group, sub, red_sub, step: int, *,
+                        queued: bool) -> Dict[str, LeafRedundancy]:
+        """Overlapped dispatch: costs the foreground only enqueues.
+
+        Launches the speculative queued-or-full program and starts the
+        non-blocking host copy of its ``fits`` scalar.  Nothing is donated
+        and nothing waits: the returned **live view** carries the old
+        epoch's checksums/parity (kept alive as the double buffer), a
+        fresh zero epoch-B dirty bitmap for the foreground's next
+        ``on_write``, and ``shadow`` = snapshot A — so scrub, recovery,
+        accounting, and a crash-persisted checkpoint all keep treating the
+        in-flight blocks as vulnerable until resolution adopts the result.
+        The foreground's next step depends only on already-defined arrays,
+        so it dispatches without ever waiting on the update (the paper's
+        dirty-bitmap swap, epoch A consumed while epoch B records).
+        """
+        variant = "async_queued" if queued else "async_full"
+        snaps, fresh = self._swap_fn(g.label)(
+            {n: red_sub[n].dirty for n in g.names},
+            {n: red_sub[n].shadow for n in g.names})
+        out_red, fits = self._update_fn(g.label, variant)(sub, red_sub)
+        if hasattr(fits, "copy_to_host_async"):
+            fits.copy_to_host_async()
+        g.pending = _Pending(red=out_red, fits=fits, queued=queued, step=step)
+        return {n: dataclasses.replace(
+                    red_sub[n], dirty=fresh[n], shadow=snaps[n])
+                for n in g.names}
+
+    def _resolve(self, g: _Group, red_sub, *, wait: bool):
+        """Adopt an in-flight update into the live view, if resolvable.
+
+        Returns ``(red_sub', overflowed, deferred)``; ``(None, False, 0)``
+        when the update is still in flight and ``wait`` is False.  Reading
+        ``fits`` here is a host memory read, not a device sync: the async
+        copy was issued at dispatch, one tick (or more) ago — ``wait``
+        blocks only when a deadline or scrub forces settled state.
+        Adoption takes the program's checksums/parity/meta plus its
+        ``shadow = overflowed ? snapshot : 0`` select — so a mispredicted
+        queued dispatch (``overflowed``) keeps epoch A conservatively
+        marked with no host-side merge; the caller then runs the
+        full-recompute fallback.  The live dirty bitmap (epoch B, with
+        every mark since dispatch) is carried over from the caller.
+        ``deferred`` counts due ticks coalesced while the update was
+        outstanding.
+        """
+        p = g.pending
+        if p is None:
+            return red_sub, False, 0
+        if not wait and not _ready(p.fits):
+            return None, False, 0
+        fits = bool(np.asarray(p.fits))
+        g.predicted_fits = fits
+        out = {n: dataclasses.replace(p.red[n], dirty=red_sub[n].dirty)
+               for n in g.names}
+        g.pending = None
+        return out, (p.queued and not fits), p.coalesced
+
+    def settle(self, red: RedundancyState,
+               leaves: Optional[Mapping[str, jax.Array]] = None
+               ) -> RedundancyState:
+        """Adopt every in-flight async update into ``red`` (blocking).
+
+        No new periodic pass is scheduled (that is ``flush``).  With
+        ``leaves`` provided, a mispredicted speculative queued update is
+        repaired immediately with the full-recompute fallback; without
+        them, its blocks simply stay marked (shadow) for the next pass —
+        conservative either way.  Ticks coalesced behind the in-flight
+        update fold into the next due tick.
+        """
+        out = dict(red)
+        for g in self._protected():
+            if g.pending is None:
+                continue
+            red_sub, overflowed, _ = self._resolve(
+                g, {n: out[n] for n in g.names}, wait=True)
+            out.update(red_sub)
+            if overflowed and leaves is not None:
+                # Full-recompute repair through the *non-donating* overlap
+                # program: settle also backs read-only paths (scrub), whose
+                # callers keep using their own red — the donating blocking
+                # program would invalidate it.  Bitwise-identical to the
+                # blocking full program (queued=False never overflows, so
+                # its dirty/shadow outputs are zeros too).
+                repaired, fits = self._update_fn(g.label, "async_full")(
+                    {n: leaves[n] for n in g.names},
+                    {n: out[n] for n in g.names})
+                g.predicted_fits = bool(np.asarray(fits))
+                out.update(repaired)
+        return out
 
     def _scrub_fn(self, label: str):
         fn = self._jit_scrub.get(label)
@@ -455,15 +696,33 @@ class ProtectedStore:
         returning it — the callable form skips building the mapping on the
         (majority of) steps where nothing is due.
 
-        Note: the group's Algorithm-1 input (``red``) is donated — callers
-        must adopt the returned state.
+        On the default overlap-pipelined path (``RedundancyPolicy
+        .async_tick``) a due tick costs the foreground only a dispatch —
+        never a device->host round trip: the update program is launched
+        speculatively (queued vs full chosen by the previous tick's
+        device-computed fit signal, fetched via a non-blocking copy), and
+        dirty epochs are double-buffered — the returned state carries the
+        previous epoch's checksums/parity with a fresh dirty bitmap and
+        the consumed snapshot held in ``shadow``, so the foreground's next
+        step depends only on already-defined arrays and never waits on the
+        in-flight update.  Results are adopted lazily on a later tick (or
+        eagerly on ``flush``/``scrub``/``settle``); a mispredicted queued
+        dispatch keeps its snapshot marked (the program's shadow select)
+        and the full-recompute fallback runs at resolution
+        (``report.overflowed``).  At most one update per group is in
+        flight; due ticks arriving meanwhile coalesce
+        (``report.coalesced``).
+
+        Note: callers must always adopt the returned state — it is the
+        only live lineage (the blocking path donates the Algorithm-1
+        input; the overlapped path tracks the epoch buffers through it).
         """
         step = int(step)
         if step_time is not None:
             self._governor.observe(step_time)
         report = TickReport(step=step)
         out = dict(red)
-        updated, deadline, scrubbed = [], [], []
+        updated, deadline, scrubbed, coalesced, overflowed = [], [], [], [], []
         # One clock read and one leaf materialization serve the whole tick;
         # each group's leaf sub-dict is built at most once even when both its
         # update and its scrub fire on the same step.
@@ -492,6 +751,8 @@ class ProtectedStore:
                 # The step counter restarted (new serve wave / fresh run on a
                 # long-lived store): rebase so deadlines keep their meaning.
                 g.last_update_step = 0
+            sp = scrub_period if scrub_period is not None else lp.scrub_period_steps
+            scrub_due = bool(sp and policy_mod.should_scrub(step, sp))
             if lp.mode == "vilamb":
                 eff = min(lp.period_steps * self._governor.scale,
                           self.policy.period_cap)
@@ -501,16 +762,50 @@ class ProtectedStore:
                      and step - g.last_update_step >= lp.max_vulnerable_steps)
                     or (lp.max_vulnerable_seconds > 0
                         and now - g.last_update_time >= lp.max_vulnerable_seconds))
-                if due or overdue:
-                    out.update(self._run_update(
+                if self._async_group(g):
+                    # Overlap pipeline: resolve lazily (blocking only when a
+                    # deadline or a scrub forces settled state), then keep the
+                    # pipeline primed with at most one in-flight update.
+                    res, ovf, deferred = self._resolve(
+                        g, {n: out[n] for n in g.names},
+                        wait=overdue or scrub_due)
+                    if res is None:
+                        # Still in flight: fold this due tick into it.  The
+                        # deadline clock keeps running, so a wedged device
+                        # eventually forces a blocking resolve via overdue.
+                        if due:
+                            g.pending.coalesced += 1
+                            coalesced.append(g.label)
+                            updated.append(g.label)
+                    else:
+                        out.update(res)
+                        if ovf:
+                            # Speculation missed: the queued program could not
+                            # cover the snapshot (its blocks stayed marked via
+                            # the shadow select).  Run the always-correct full
+                            # program now.
+                            overflowed.append(g.label)
+                        if ovf or due or overdue or deferred:
+                            out.update(self._dispatch_async(
+                                g, group_leaves(),
+                                {n: out[n] for n in g.names}, step,
+                                queued=(not ovf and g.engine.has_queue
+                                        and g.predicted_fits)))
+                            g.last_update_step = step
+                            g.last_update_time = now
+                            if due or overdue:
+                                updated.append(g.label)
+                            if overdue and not due:
+                                deadline.append(g.label)
+                elif due or overdue:
+                    out.update(self._dispatch_blocking(
                         g, group_leaves(), {n: out[n] for n in g.names}))
                     g.last_update_step = step
                     g.last_update_time = now
                     updated.append(g.label)
                     if overdue and not due:
                         deadline.append(g.label)
-            sp = scrub_period if scrub_period is not None else lp.scrub_period_steps
-            if sp and policy_mod.should_scrub(step, sp):
+            if scrub_due:
                 mm, alarms = self._scrub_group(g, group_leaves(), out)
                 scrubbed.append(g.label)
                 report.mismatches += mm
@@ -518,19 +813,30 @@ class ProtectedStore:
         report.updated = tuple(updated)
         report.deadline_fired = tuple(deadline)
         report.scrubbed = tuple(scrubbed)
+        report.coalesced = tuple(coalesced)
+        report.overflowed = tuple(overflowed)
         return out, report
 
     def flush(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
               step: Optional[int] = None) -> RedundancyState:
         """Battery/preemption flush: force Algorithm 1 on every vilamb group
         now (paper §3.3).  Sync groups are up-to-date by construction.
-        Pass ``step`` when known so the steps-based freshness deadline does
-        not fire a spurious pass right after the flush."""
+        Any in-flight async update is resolved first, so the result is
+        bitwise-identical to the blocking path's flush.  Pass ``step`` when
+        known so the steps-based freshness deadline does not fire a
+        spurious pass right after the flush."""
         out = dict(red)
         now = time.monotonic()
         for g in self._protected():
             if g.policy.mode == "vilamb":
-                out.update(self._run_update(
+                if g.pending is not None:
+                    # Eager resolution; an overflowed speculative dispatch
+                    # left its blocks marked (shadow), so the forced pass
+                    # below covers them.
+                    red_sub, _, _ = self._resolve(
+                        g, {n: out[n] for n in g.names}, wait=True)
+                    out.update(red_sub)
+                out.update(self._dispatch_blocking(
                     g, {n: leaves[n] for n in g.names},
                     {n: out[n] for n in g.names}))
                 g.last_update_time = now
@@ -540,7 +846,12 @@ class ProtectedStore:
 
     def redundancy_step(self, leaves: Mapping[str, jax.Array],
                         red: RedundancyState) -> RedundancyState:
-        """Traceable flush (no jit caching/donation) — embed in outer jits."""
+        """Traceable flush (no jit caching/donation) — embed in outer jits.
+
+        Bypasses the overlap pipeline: do not interleave with ``tick`` while
+        an async update is in flight (``settle`` first) — the later adoption
+        would roll checksums back over this pass's unmarked blocks.
+        """
         out = dict(red)
         for g in self._protected():
             if g.policy.mode == "vilamb":
@@ -570,7 +881,15 @@ class ProtectedStore:
 
     def scrub(self, leaves: Mapping[str, jax.Array], red: RedundancyState
               ) -> Dict[str, jax.Array]:
-        """Per-leaf mismatch masks over clean blocks (no double-check)."""
+        """Per-leaf mismatch masks over clean blocks (no double-check).
+
+        In-flight async updates are settled first (including the full
+        fallback on a queued misprediction) so the masks match what the
+        blocking path would report.  The caller's ``red`` is left as-is —
+        it stays a conservative view (in-flight blocks marked) until the
+        next tick/flush adopts results.
+        """
+        red = self.settle(red, leaves)
         out: Dict[str, jax.Array] = {}
         for g in self._protected():
             out.update(self._scrub_fn(g.label)(
@@ -580,7 +899,12 @@ class ProtectedStore:
 
     def scrub_check(self, leaves: Mapping[str, jax.Array],
                     red: RedundancyState) -> int:
-        """Scrub all protected groups with the double-check protocol."""
+        """Scrub all protected groups with the double-check protocol.
+
+        Settles in-flight async updates first — calling this mid-flight
+        yields the same mismatch count as the blocking path.
+        """
+        red = self.settle(red, leaves)
         total = 0
         for g in self._protected():
             mm, _ = self._scrub_group(g, {n: leaves[n] for n in g.names}, red)
@@ -607,6 +931,10 @@ class ProtectedStore:
 
     # ------------------------------------------------------------- accounting
     def dirty_stats(self, red: RedundancyState) -> Dict[str, Dict[str, Any]]:
+        """Per-leaf dirty/vulnerable counts.  Deliberately *not* settled:
+        blocks consumed by an in-flight overlapped update stay counted
+        (via the live view's shadow) until resolution — the conservative
+        answer for flush sizing and MTTDL accounting."""
         out: Dict[str, Dict[str, Any]] = {}
         for g in self._protected():
             out.update(g.engine.dirty_stats({n: red[n] for n in g.names}))

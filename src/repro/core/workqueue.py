@@ -84,6 +84,18 @@ def stripe_dirty_count(stripe_dirty: jax.Array) -> jax.Array:
     return jnp.sum(stripe_dirty, dtype=jnp.int32)
 
 
+def stripe_fits(stripe_dirty: jax.Array, capacity: int) -> jax.Array:
+    """Device-side fit check: do the dirty stripes fit a ``capacity`` queue?
+
+    Bool scalar, traceable.  This is the same predicate
+    ``RedundancyEngine.queue_fits`` evaluates host-side; the overlap
+    pipeline computes it *inside* the dispatched Algorithm-1 program and
+    fetches it one tick ahead via a non-blocking async copy, so a due tick
+    never pays a device->host round trip (see ``redundancy_step_async``).
+    """
+    return stripe_dirty_count(stripe_dirty) <= capacity
+
+
 def queued_update(
     lanes: jax.Array,
     old_cks: jax.Array,

@@ -106,5 +106,9 @@ class Server:
                     scrub_period=scrub_every)
                 mismatches += report.mismatches
                 last = time.perf_counter()
+        if self.store is not None:
+            # Adopt any update still in flight from the overlap pipeline so
+            # the returned redundancy state is settled for the caller.
+            red = self.store.settle(red, flatten_dict(caches))
         return jnp.stack(out, axis=1), {"mismatches": mismatches, "red": red,
                                         "caches": caches, "pos": pos + n_tokens - 1}

@@ -163,12 +163,27 @@ class Trainer:
             protected_leaves(state.params, state.opt), state.red)
 
     def flush(self, state: TrainState) -> TrainState:
-        """Battery/preemption flush: force Algorithm 1 now (paper §3.3)."""
+        """Battery/preemption flush: force Algorithm 1 now (paper §3.3).
+
+        Resolves any in-flight overlapped update first, so the result is
+        bitwise-identical to the blocking path."""
         if self.store is None:
             return state
         red = self.store.flush(
             protected_leaves(state.params, state.opt), state.red,
             step=int(state.step))
+        return dataclasses.replace(state, red=red)
+
+    def settle(self, state: TrainState) -> TrainState:
+        """Adopt in-flight overlapped redundancy results (no new pass).
+
+        Call before handing ``state.red`` to code outside the store's
+        lifecycle (custom verification, external persistence).  ``flush``
+        and ``scrub_check`` settle on their own."""
+        if self.store is None:
+            return state
+        red = self.store.settle(
+            state.red, protected_leaves(state.params, state.opt))
         return dataclasses.replace(state, red=red)
 
     def run(self, state: TrainState, data, steps: int,

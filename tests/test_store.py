@@ -78,6 +78,9 @@ def test_mixed_policy_byte_identical_to_single_mode_engines():
         else:
             assert not report.updated
 
+    # The default tick is overlap-pipelined: adopt the in-flight update
+    # before comparing bits (no new pass is scheduled by settle).
+    red = store.settle(red, leaves)
     for f in RED_FIELDS:
         np.testing.assert_array_equal(
             np.asarray(getattr(red["params/w"], f)),

@@ -119,17 +119,18 @@ def test_queue_overflow_detected_and_full_fallback():
         r0 = store.on_write(r0, events={"w": ALL, "e": ALL})  # overflow
         r1, rep = store.tick(leaves2, r0, 1)
         assert rep.updated
-        outs.append(r1)
+        # settle adopts the overlapped dispatch (and would repair a
+        # speculative overflow via the full fallback) before comparing
+        outs.append(store.settle(r1, leaves2))
     _assert_red_equal(outs[0], outs[1])
 
 
 def test_store_tick_dispatches_queued_and_matches_reference():
-    """Sparse dirty state through store.tick (queued dispatch) must equal a
-    work-queue-disabled store byte for byte."""
+    """Sparse dirty state through store.tick (speculative queued dispatch
+    once the fit signal resolves) must equal a work-queue-disabled store
+    byte for byte."""
     _, leaves = _mk()
     ev = jnp.zeros((24,), bool).at[jnp.array([0, 7])].set(True)
-    # only the marked rows change (dirty tracking must cover every write)
-    leaves2 = dict(leaves, w=leaves["w"].at[jnp.array([0, 7])].add(-0.5))
     outs = []
     for frac in (0.5, 0.0):
         pol = RedundancyPolicy.single("vilamb", period_steps=1,
@@ -137,11 +138,25 @@ def test_store_tick_dispatches_queued_and_matches_reference():
                                       work_queue_frac=frac)
         store = ProtectedStore(pol).attach(leaves)
         r0 = store.init(leaves)
-        r0 = store.on_write(r0, events={"w": ev})
-        r1, rep = store.tick(leaves2, r0, 1)
-        assert rep.updated
+        lv = dict(leaves)
+        # two rounds: the pessimistic first dispatch goes full and resolves
+        # the fit signal; the second round then speculates queued
+        for step in (1, 2):
+            r0 = store.on_write(r0, events={"w": ev})
+            # only the marked rows change (dirty tracking covers every write)
+            lv = dict(lv, w=lv["w"].at[jnp.array([0, 7])].add(-0.5 * step))
+            r1, rep = store.tick(lv, r0, step)
+            assert rep.updated
+            r0 = r1
+            g = next(iter(store.groups.values()))
+            if g.pending is not None:   # deterministic resolution timing
+                jax.block_until_ready(g.pending.fits)
+        if frac > 0:
+            g = next(iter(store.groups.values()))
+            assert g.pending is not None and g.pending.queued
+        r1 = store.settle(r1, lv)
         outs.append(r1)
-        assert sum(int(v.sum()) for v in store.scrub(leaves2, r1).values()) == 0
+        assert sum(int(v.sum()) for v in store.scrub(lv, r1).values()) == 0
     _assert_red_equal(outs[0], outs[1])
 
 
