@@ -65,6 +65,11 @@ def main(argv=None) -> None:
                    help="comma-separated module names (e.g. dirty_cost,ycsb)")
     p.add_argument("--smoke", action="store_true",
                    help="tiny shapes / few iterations (CI budget)")
+    p.add_argument("--repeat", type=int, default=1,
+                   help="run each module N times, keep the per-row minimum "
+                        "us_per_call (scheduler-noise suppression on the "
+                        "shared CPU container; a real regression raises "
+                        "the minimum too)")
     args = p.parse_args(argv)
 
     from . import (battery, dirty_cost, fio_patterns, insert_throughput,
@@ -100,7 +105,18 @@ def main(argv=None) -> None:
         kw = SMOKE_KW.get(short, {}) if args.smoke else {}
         t0 = time.time()
         try:
-            rows = mod.run(**kw)
+            # Best-of-N merge by row name: wall rows (us > 0) keep their
+            # fastest repeat, derived-only rows keep the first.
+            merged: dict = {}
+            order: list = []
+            for _ in range(max(args.repeat, 1)):
+                for name, us, derived in mod.run(**kw):
+                    if name not in merged:
+                        merged[name] = (us, derived)
+                        order.append(name)
+                    elif us > 0 and us < merged[name][0]:
+                        merged[name] = (us, derived)
+            rows = [(n, *merged[n]) for n in order]
             emit(rows)
             all_rows.extend(rows)
         except Exception as e:  # keep the harness running

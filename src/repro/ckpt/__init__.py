@@ -1,2 +1,2 @@
-from .checkpoint import CheckpointManager
+from .checkpoint import CheckpointManager, RestoreReport
 from .failure import PreemptionHandler

@@ -22,14 +22,34 @@ Design points for fleet scale:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+@dataclasses.dataclass
+class RestoreReport:
+    """What ``restore_verified`` did — observability for the fault battery.
+
+    ``tried`` records one ``(step, outcome)`` pair per candidate in the
+    order attempted; outcomes: ``ok``, ``ok_repaired``, ``load_failed``,
+    ``file_checksum``, ``meta_checksum``, ``unrecoverable``,
+    ``repair_failed``.  ``step`` is the checkpoint finally returned
+    (None = every candidate rejected).  ``repaired_blocks`` counts parity
+    rebuilds on the *returned* candidate; ``lost_blocks`` accumulates the
+    unrepairable blocks of *rejected* candidates (the reason they were
+    skipped) — the returned checkpoint itself lost nothing.
+    """
+    tried: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+    step: Optional[int] = None
+    repaired_blocks: int = 0
+    lost_blocks: int = 0
 
 
 def _path_str(kp) -> str:
@@ -65,6 +85,7 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self.last_restore_report: Optional[RestoreReport] = None
 
     # ----------------------------------------------------------------- save
     def save(self, step: int, state: Any, blocking: bool = True) -> None:
@@ -165,6 +186,11 @@ class CheckpointManager:
 
         ``leaves_of(state) -> flat leaves`` / ``replace_leaves(state,
         leaves) -> state`` default to the TrainState protected-leaf view.
+
+        ``self.last_restore_report`` (a :class:`RestoreReport`) records the
+        attempt trail — which candidates were rejected and why, and how
+        many blocks the returned one needed rebuilt — so the fault battery
+        can assert *why* a restore succeeded, not just that it did.
         """
         if leaves_of is None or replace_leaves is None:
             from repro.train.state import protected_leaves, replace_protected
@@ -172,6 +198,8 @@ class CheckpointManager:
                 lambda st: protected_leaves(st.params, st.opt))
             replace_leaves = replace_leaves or (
                 lambda st, lv: replace_protected(st, lv))
+        report = RestoreReport()
+        self.last_restore_report = report
         candidates = self.steps()
         if step is not None:
             candidates = [s for s in candidates if s == step]
@@ -185,24 +213,37 @@ class CheckpointManager:
                 import warnings
                 warnings.warn(f"restore of step {s} failed: {e!r}; "
                               "trying the previous checkpoint")
+                report.tried.append((s, "load_failed"))
                 continue
             if state is None:
+                report.tried.append((s, "file_checksum"))
                 continue
             if store is None or not store.protects:
+                report.tried.append((s, "ok"))
+                report.step = s
                 return state
             red = state.red
             leaves = leaves_of(state)
             if not all(bool(ok) for ok in store.verify_meta(red).values()):
+                report.tried.append((s, "meta_checksum"))
                 continue  # corrupted checksum pages: try the previous ckpt
             mm = store.scrub(leaves, red)
             if sum(int(v.sum()) for v in jax.tree_util.tree_leaves(mm)) == 0:
+                report.tried.append((s, "ok"))
+                report.step = s
                 return state
             repaired, fixed, lost = store.repair(leaves, red, mm)
             if lost:
-                continue  # vulnerable stripe: fall back a checkpoint
+                report.tried.append((s, "unrecoverable"))
+                report.lost_blocks += int(lost)
+                continue  # vulnerable or multi-corrupt stripe: fall back
             mm2 = store.scrub(repaired, red)
             if sum(int(v.sum()) for v in jax.tree_util.tree_leaves(mm2)) == 0:
+                report.tried.append((s, "ok_repaired"))
+                report.step = s
+                report.repaired_blocks += int(fixed)
                 return replace_leaves(state, repaired)
+            report.tried.append((s, "repair_failed"))
         return None
 
     def restore_into(self, state_struct: Any, shardings: Any = None,

@@ -59,20 +59,51 @@ def repair_corruption(engine, leaves, red, mismatches) -> tuple:
     """Recover every detected-corrupt block from parity (paper left this
     unimplemented; we do not). Returns (repaired_leaves, n_fixed, n_lost).
 
-    ``engine`` is anything exposing ``recover_block`` — a RedundancyEngine
-    or a ProtectedStore (which routes each leaf to its owning group).
+    ``engine`` is anything exposing ``recover_block`` and ``metas`` — a
+    RedundancyEngine or a ProtectedStore (which routes each leaf to its
+    owning group).
 
-    Blocks in vulnerable stripes cannot be rebuilt (paper §3.3) — callers
-    fall back to checkpoint restore for those.
+    Two unrecoverable classes are refused *loudly*, never papered over:
+
+    * blocks in vulnerable stripes (another member dirty/shadow-set) —
+      parity is stale there (paper §3.3); and
+    * **two or more detected-corrupt blocks sharing one parity group** —
+      XOR parity is single-failure-correcting, and "repairing" one member
+      from a stripe containing another corrupted member would fabricate
+      plausible-looking garbage while reporting success.  The whole stripe
+      is counted lost and a warning names it.
+
+    Callers fall back to checkpoint restore for lost blocks
+    (``CheckpointManager.restore_verified`` does this automatically).
     """
+    import collections
+    import warnings
+
     import numpy as np
+
     fixed = 0
     lost = 0
     leaves = dict(leaves)
+    metas = engine.metas
     for name, mask in mismatches.items():
         ids = np.nonzero(np.asarray(mask))[0]
+        if not ids.size:
+            continue
+        width = metas[name].stripe_data_blocks
+        by_stripe = collections.defaultdict(list)
         for b in ids:
-            repaired, ok = engine.recover_block(leaves[name], red[name], name, int(b))
+            by_stripe[int(b) // width].append(int(b))
+        for stripe, blks in sorted(by_stripe.items()):
+            if len(blks) > 1:
+                warnings.warn(
+                    f"{name}: {len(blks)} corrupt blocks {blks} share parity "
+                    f"group {stripe}; XOR parity corrects single failures — "
+                    "counting the stripe as lost (restore from checkpoint)",
+                    RuntimeWarning, stacklevel=2)
+                lost += len(blks)
+                continue
+            b = blks[0]
+            repaired, ok = engine.recover_block(leaves[name], red[name], name, b)
             if bool(ok):
                 leaves[name] = repaired
                 fixed += 1

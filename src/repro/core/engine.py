@@ -577,6 +577,21 @@ class RedundancyEngine:
         return blocks.from_lanes(new_lanes, meta), others_clean
 
     # ------------------------------------------------------------ accounting
+    def vulnerable_masks(self, red: RedundancyState) -> Dict[str, jax.Array]:
+        """Per-leaf bool[n_blocks] of blocks inside the vulnerability window.
+
+        ``dirty | shadow`` unpacked — the exact block set whose redundancy
+        is stale (paper §3.3): corruptions landing here are the knob-bounded
+        accepted loss; everything outside must be scrub-detectable.  The
+        counts in :meth:`dirty_stats` are reductions of these masks.
+        """
+        out: Dict[str, jax.Array] = {}
+        for name, meta in self.metas.items():
+            r = red[name]
+            out[name] = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow),
+                                    meta.n_blocks)
+        return out
+
     def dirty_stats(self, red: RedundancyState) -> Dict[str, Dict[str, jax.Array]]:
         """Dirty/vulnerable-stripe counts (feeds §4.7 battery + §4.8 MTTDL)."""
         out = {}

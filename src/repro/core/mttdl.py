@@ -1,4 +1,6 @@
-"""Reliability model — paper §4.8.
+"""Reliability model — paper §4.8, plus the measured-detection extension.
+
+Closed form (the paper's):
 
 MTTDL_NoRed  = MTTF_page / P                (P = total pages/blocks)
 MTTDL_Vilamb = MTTF_page / (V * N)          (V = vulnerable stripes,
@@ -7,10 +9,25 @@ uplift       = P / (V * N)
 
 V is measured empirically from dirty traces of real workloads (the engine's
 ``dirty_stats``), exactly as the paper does.
+
+Measured form (:func:`mttdl_measured`): the closed form treats detection as
+instantaneous — a corruption in a *clean* stripe is assumed repaired the
+moment it lands.  In reality it sits latent until the next scheduled scrub
+flags it; during that latency a **second** fault in the same stripe defeats
+the single-failure XOR parity.  The fault-injection oracle
+(``repro.faults.oracle``) measures that latency against real scrub
+schedules, and the measured MTTDL combines both loss modes:
+
+    rate_window = V * N / MTTF_block          (fault lands inside the window)
+    rate_double = S * (N / MTTF_block)^2 * L  (second fault within latency L,
+                                               S = total stripes)
+    MTTDL_measured = 1 / (rate_window + rate_double)
+
+With L -> 0 this reduces exactly to the paper's closed form.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Mapping
+from typing import Dict, Iterable, Mapping, Optional, Sequence
 
 
 def mttdl_no_red(mttf_block: float, total_blocks: int) -> float:
@@ -35,6 +52,43 @@ def aggregate_uplift(stats: Mapping[str, Mapping[str, float]], stripe_blocks: in
     total = sum(int(s["total_blocks"]) for s in stats.values())
     vuln = sum(float(s["vulnerable_stripes"]) for s in stats.values())
     return mttdl_uplift(total, vuln, stripe_blocks)
+
+
+def mttdl_measured(mttf_block: float, vulnerable_stripes: float,
+                   stripe_blocks: int, total_stripes: int,
+                   detect_latency_seconds: float) -> float:
+    """MTTDL from *measured* quantities (module docstring for the model).
+
+    ``vulnerable_stripes`` is the time-averaged V from a dirty trace;
+    ``detect_latency_seconds`` the measured mean scrub detection latency
+    (0 reduces to :func:`mttdl_vilamb` exactly, up to the closed form's
+    1e-12 clamp).
+    """
+    lam = 1.0 / float(mttf_block)
+    rate_window = float(vulnerable_stripes) * stripe_blocks * lam
+    rate_double = (total_stripes * (stripe_blocks * lam) ** 2
+                   * max(float(detect_latency_seconds), 0.0))
+    denom = rate_window + rate_double
+    if denom <= 0:
+        return float("inf")
+    return 1.0 / denom
+
+
+def detection_latency_stats(latency_steps: Sequence[float],
+                            step_seconds: float = 1.0) -> Dict[str, float]:
+    """Summarize measured scrub detection latencies (steps -> seconds).
+
+    Returns mean/max/n in seconds given the measured per-step wall time;
+    empty input yields zeros (no detectable injections ran).
+    """
+    xs = [float(x) for x in latency_steps if x is not None]
+    if not xs:
+        return {"n": 0, "mean_s": 0.0, "max_s": 0.0}
+    return {
+        "n": len(xs),
+        "mean_s": sum(xs) / len(xs) * step_seconds,
+        "max_s": max(xs) * step_seconds,
+    }
 
 
 def average_stats(trace: Iterable[Mapping[str, Mapping[str, float]]]) -> Dict[str, Dict[str, float]]:

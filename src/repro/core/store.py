@@ -44,6 +44,16 @@ from .state import LeafRedundancy, RedundancyState, leaf_red_struct
 MODES = ("none", "sync", "vilamb")
 
 
+def _async_tick_default() -> bool:
+    """Default for ``RedundancyPolicy.async_tick``: the overlap pipeline,
+    unless ``REPRO_ASYNC_TICK=0`` — the CI lever that re-runs the suite on
+    the blocking tick (scripts/ci.sh) without touching call sites that
+    pass the knob explicitly."""
+    import os
+    return os.environ.get("REPRO_ASYNC_TICK", "1").lower() not in (
+        "0", "false", "no")
+
+
 # --------------------------------------------------------------------- policy
 @dataclasses.dataclass(frozen=True)
 class LeafPolicy:
@@ -100,8 +110,9 @@ class RedundancyPolicy:
     # ``pipeline_depth=0`` reverts to the blocking tick (exact host-side
     # queue_fits dispatch); depth counts in-flight updates per group — 1 is
     # the implemented maximum, deeper requests coalesce.  Mesh-sharded
-    # groups always take the blocking path.
-    async_tick: bool = True
+    # groups always take the blocking path.  Defaults to the env lever
+    # ``REPRO_ASYNC_TICK`` (scripts/ci.sh runs the suite both ways).
+    async_tick: bool = dataclasses.field(default_factory=_async_tick_default)
     pipeline_depth: int = 1
     # AOT-compile every Algorithm-1 variant a group can dispatch at attach
     # time, so the first overlapped dispatch never hides a compile stall.
@@ -270,6 +281,41 @@ class ProtectedStore:
         self._jit_update: Dict[Tuple[str, str], Any] = {}
         self._jit_scrub: Dict[str, Any] = {}
         self._jit_misc: Dict[Tuple[str, str], Any] = {}
+        # Lifecycle phase hooks (repro.faults): host-level observation
+        # points for crash-consistency replay.  Empty list = zero overhead
+        # on every hot path (a single truthiness check).
+        self._phase_hooks: List[Callable[[str, Dict[str, Any]], None]] = []
+
+    # -------------------------------------------------------------- phase hooks
+    def add_phase_hook(self, fn: Callable[[str, Dict[str, Any]], None]) -> None:
+        """Register ``fn(phase, info)`` to fire at lifecycle phases.
+
+        Phases (see ``repro.faults.crashpoints.CRASH_PHASES``): ``on_write``,
+        ``dispatch`` (speculative overlapped launch), ``coalesce`` (due tick
+        folded into the in-flight update), ``adopt`` / ``adopt_forced``
+        (lazy vs deadline/scrub-forced resolution), ``blocking_update``,
+        ``scrub``, ``tick``, ``flush``, ``settle``.  ``info['red']`` is the
+        live redundancy view at that instant — the state a crash would
+        persist.  Hooks are host-level: they never fire while tracing, so
+        an ``on_write`` embedded in a jitted step is silently skipped.
+        Exceptions raised by a hook propagate (the crash machine's process-
+        death emulation relies on this).
+        """
+        self._phase_hooks.append(fn)
+
+    def remove_phase_hook(self, fn) -> None:
+        self._phase_hooks.remove(fn)
+
+    def _phase(self, name: str, **info) -> None:
+        if not self._phase_hooks:
+            return
+        red = info.get("red")
+        if red is not None:
+            for leaf in jax.tree_util.tree_leaves(red):
+                if isinstance(leaf, jax.core.Tracer):
+                    return                  # under trace: host hooks skip
+        for fn in list(self._phase_hooks):
+            fn(name, info)
 
     # ------------------------------------------------------------ construction
     def attach(self, tree: Any, specs: Optional[Mapping[str, Any]] = None
@@ -467,6 +513,8 @@ class ProtectedStore:
                     raise ValueError(
                         f"sync leaves {g.names} need old=/new= (or row_diffs=) "
                         "in on_write")
+        if self._phase_hooks:
+            self._phase("on_write", red=dict(out))
         return out
 
     # --------------------------------------------------- dispatch machinery
@@ -669,6 +717,8 @@ class ProtectedStore:
                     {n: out[n] for n in g.names})
                 g.predicted_fits = bool(np.asarray(fits))
                 out.update(repaired)
+        if self._phase_hooks:
+            self._phase("settle", red=dict(out))
         return out
 
     def _scrub_fn(self, label: str):
@@ -766,6 +816,7 @@ class ProtectedStore:
                     # Overlap pipeline: resolve lazily (blocking only when a
                     # deadline or a scrub forces settled state), then keep the
                     # pipeline primed with at most one in-flight update.
+                    had_pending = g.pending is not None
                     res, ovf, deferred = self._resolve(
                         g, {n: out[n] for n in g.names},
                         wait=overdue or scrub_due)
@@ -777,8 +828,16 @@ class ProtectedStore:
                             g.pending.coalesced += 1
                             coalesced.append(g.label)
                             updated.append(g.label)
+                            if self._phase_hooks:
+                                self._phase("coalesce", red=dict(out),
+                                            group=g.label, step=step)
                     else:
                         out.update(res)
+                        if had_pending and self._phase_hooks:
+                            self._phase(
+                                "adopt_forced" if (overdue or scrub_due)
+                                else "adopt", red=dict(out), group=g.label,
+                                step=step, overflowed=ovf)
                         if ovf:
                             # Speculation missed: the queued program could not
                             # cover the snapshot (its blocks stayed marked via
@@ -793,6 +852,10 @@ class ProtectedStore:
                                         and g.predicted_fits)))
                             g.last_update_step = step
                             g.last_update_time = now
+                            if self._phase_hooks:
+                                self._phase("dispatch", red=dict(out),
+                                            group=g.label, step=step,
+                                            queued=g.pending.queued)
                             if due or overdue:
                                 updated.append(g.label)
                             if overdue and not due:
@@ -803,6 +866,9 @@ class ProtectedStore:
                     g.last_update_step = step
                     g.last_update_time = now
                     updated.append(g.label)
+                    if self._phase_hooks:
+                        self._phase("blocking_update", red=dict(out),
+                                    group=g.label, step=step)
                     if overdue and not due:
                         deadline.append(g.label)
             if scrub_due:
@@ -810,11 +876,16 @@ class ProtectedStore:
                 scrubbed.append(g.label)
                 report.mismatches += mm
                 report.alarms += alarms
+                if self._phase_hooks:
+                    self._phase("scrub", red=dict(out), group=g.label,
+                                step=step, mismatches=mm)
         report.updated = tuple(updated)
         report.deadline_fired = tuple(deadline)
         report.scrubbed = tuple(scrubbed)
         report.coalesced = tuple(coalesced)
         report.overflowed = tuple(overflowed)
+        if self._phase_hooks:
+            self._phase("tick", red=dict(out), step=step, report=report)
         return out, report
 
     def flush(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
@@ -842,6 +913,8 @@ class ProtectedStore:
                 g.last_update_time = now
                 if step is not None:
                     g.last_update_step = int(step)
+        if self._phase_hooks:
+            self._phase("flush", red=dict(out), step=step)
         return out
 
     def redundancy_step(self, leaves: Mapping[str, jax.Array],
@@ -928,6 +1001,30 @@ class ProtectedStore:
         """Parity-rebuild every detected-corrupt block; see failure module."""
         from repro.ckpt.failure import repair_corruption
         return repair_corruption(self, leaves, red, mismatches)
+
+    def inject(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
+               spec) -> Tuple[Dict[str, jax.Array], RedundancyState]:
+        """Apply one ``repro.faults.FaultSpec`` functionally (test/CI hook).
+
+        The store is the façade for fault injection too: corruptions are
+        placed in block-lane space against this store's exact geometry,
+        never via test-local array surgery.  Returns new ``(leaves, red)``;
+        inputs are untouched.
+        """
+        from repro.faults.inject import apply_fault
+        return apply_fault(self.metas, leaves, red, spec)
+
+    def vulnerable_masks(self, red: RedundancyState) -> Dict[str, jax.Array]:
+        """Per-leaf bool[n_blocks] masks of the instantaneous vulnerability
+        window (``dirty | shadow``) — the exact set the §5 oracle audits.
+        Deliberately *not* settled, like :meth:`dirty_stats`: blocks
+        consumed by an in-flight overlapped update stay marked until
+        adoption."""
+        out: Dict[str, jax.Array] = {}
+        for g in self._protected():
+            out.update(g.engine.vulnerable_masks(
+                {n: red[n] for n in g.names}))
+        return out
 
     # ------------------------------------------------------------- accounting
     def dirty_stats(self, red: RedundancyState) -> Dict[str, Dict[str, Any]]:

@@ -1,0 +1,171 @@
+"""CI fault-injection battery:  ``python -m repro.faults [--smoke]``.
+
+Three passes, each seeded and fully deterministic:
+
+1. **Crash sweep** — enumerate every lifecycle phase the pipelined tick
+   fires (speculative dispatch, coalesce/mid-flight, lazy adoption,
+   forced resolve, blocking update, scrub, flush, …) and crash+restart at
+   each one; every outcome must be bitwise-recoverable.
+2. **Crash + corruption** — at a mid-flight crash point, corrupt one
+   block outside the vulnerability window (must be parity-repaired on
+   restore) and one inside it (loss must be provably within the window).
+3. **Oracle** — scrub over injected single-stripe corruptions must detect
+   100% outside the window with zero false positives, across >= 3 seeds.
+
+Exit status 1 on any violation, so ``scripts/ci.sh`` fails the build.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ProtectedStore, RedundancyPolicy
+
+from .crashpoints import CrashPlan, CrashPointMachine
+from .inject import FaultInjector, FaultSpec
+from .oracle import check_detection, vulnerability_window
+
+# The PR3 pipeline phases a sweep must prove crash-safe (acceptance
+# criterion: speculative dispatch, mid-flight, lazy adoption, forced
+# resolve — plus the classic flush/scrub/write points).
+REQUIRED_PHASES = ("dispatch", "coalesce", "adopt", "adopt_forced",
+                   "on_write", "tick", "flush")
+
+
+def _make_leaves():
+    return {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (24, 200), jnp.float32),
+        "e": jax.random.normal(jax.random.PRNGKey(1), (16, 64), jnp.bfloat16),
+    }
+
+
+def _make_store():
+    # period 2 + a deadline of 3 + a scrub at step 5 exercises speculative
+    # dispatch (step 2), coalescing while held in flight (step 4),
+    # deadline+scrub-forced resolve (step 5) and lazy adoption (step 6).
+    pol = RedundancyPolicy.single(
+        "vilamb", period_steps=2, max_vulnerable_steps=3,
+        lanes_per_block=128, work_queue_frac=0.5, async_tick=True,
+        precompile=False)
+    return ProtectedStore(pol).attach(_make_leaves())
+
+
+def crash_sweep(seed: int, steps: int, tmp: str) -> int:
+    machine = CrashPointMachine(
+        _make_store, _make_leaves, tmp, seed=seed, steps=steps,
+        scrub_every=5, hold_inflight_steps=(3, 4))
+    outcomes = machine.sweep(require_phases=REQUIRED_PHASES)
+    bad = [o for o in outcomes if not o.ok]
+    byc = {}
+    for o in outcomes:
+        byc[o.classification] = byc.get(o.classification, 0) + 1
+    print(f"  crash sweep seed={seed}: {len(outcomes)} crash points, "
+          f"outcomes={byc}")
+    for o in bad:
+        print(f"    FAIL {o.plan.phase}#{o.plan.occurrence} step={o.step}: "
+              f"{o.classification} diverged={o.diverged} "
+              f"scrub_after={o.scrub_after_flush}")
+    return len(bad)
+
+
+def crash_with_corruption(seed: int, steps: int, tmp: str) -> int:
+    """Corrupt the persisted state at a mid-flight crash: outside-window
+    blocks must repair, inside-window blocks must be provably in-window."""
+    machine = CrashPointMachine(
+        _make_store, _make_leaves, f"{tmp}/fx", seed=seed, steps=steps,
+        scrub_every=0, hold_inflight_steps=(3, 4))
+    fired = machine.enumerate_phases()
+    plans = [CrashPlan(p, o) for p, o in fired if p == "dispatch"]
+    if not plans:
+        print("  crash+corruption: no dispatch phase fired (workload bug)")
+        return 1
+    plan = plans[-1]
+    probe = machine.run_crash(plan)            # learn the window at the crash
+    fails = 0
+    meta = machine._probe().protected_metas["w"]
+    window_w = probe.window.get("w", set())
+    clean = [b for b in range(meta.n_blocks)
+             if b not in window_w
+             and not any((b // meta.stripe_data_blocks)
+                         == (v // meta.stripe_data_blocks)
+                         for v in window_w)]
+    if clean:
+        out = machine.run_crash(plan, faults=(
+            FaultSpec(kind="data_bitflip", leaf="w", block=clean[0],
+                      lane=3, bit=7),))
+        ok = out.classification == "recovered_bitwise"
+        print(f"  crash+corruption outside window @{plan.phase}: "
+              f"{out.classification} {'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    if window_w:
+        b = sorted(window_w)[0]
+        out = machine.run_crash(plan, faults=(
+            FaultSpec(kind="data_bitflip", leaf="w", block=b, lane=3,
+                      bit=7),))
+        ok = out.ok
+        print(f"  crash+corruption inside window @{plan.phase}: "
+              f"{out.classification} {'OK' if ok else 'FAIL'}")
+        fails += 0 if ok else 1
+    return fails
+
+
+def oracle_pass(seed: int, steps: int) -> int:
+    store = _make_store()
+    leaves = _make_leaves()
+    inj = FaultInjector(store, seed=seed)
+    rng = np.random.default_rng(seed)
+    red = store.init(leaves)
+    for step in range(1, steps + 1):
+        rows = rng.choice(24, size=int(rng.integers(1, 4)), replace=False)
+        idx = jnp.asarray(np.sort(rows))
+        leaves = dict(leaves, w=leaves["w"].at[idx].add(0.5))
+        ev = jnp.zeros((24,), bool).at[idx].set(True)
+        red = store.on_write(red, events={"w": ev})
+        red, _ = store.tick(leaves, red, step)
+    # single-stripe corruptions outside the live window: all must detect
+    specs = inj.plan_clean_blocks(red, n=5, kinds=("data_bitflip",
+                                                   "stale_redundancy"))
+    window = vulnerability_window(store, red)
+    leaves2, red2 = inj.inject_many(leaves, red, specs)
+    report = check_detection(store, leaves2, red2, specs, window=window)
+    ok = report.ok and sum(len(v) for v in report.expected.values()) == len(
+        {(s.leaf, b) for s in specs for b in s.touched_blocks})
+    print(f"  oracle seed={seed}: {report.summary()} "
+          f"{'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI budget: 1 crash-sweep seed, 3 oracle seeds")
+    p.add_argument("--seeds", type=int, default=3)
+    p.add_argument("--steps", type=int, default=6)
+    args = p.parse_args(argv)
+
+    t0 = time.time()
+    fails = 0
+    sweep_seeds = 1 if args.smoke else args.seeds
+    with tempfile.TemporaryDirectory() as tmp:
+        print("== crash-point sweep ==")
+        for seed in range(sweep_seeds):
+            fails += crash_sweep(seed, args.steps, f"{tmp}/s{seed}")
+        print("== crash + corruption ==")
+        fails += crash_with_corruption(0, args.steps, tmp)
+    print("== vulnerability-window oracle ==")
+    for seed in range(max(args.seeds, 3)):
+        fails += oracle_pass(seed, args.steps)
+    dt = time.time() - t0
+    print(f"== fault battery {'OK' if not fails else f'FAILED ({fails})'} "
+          f"in {dt:.1f}s ==")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

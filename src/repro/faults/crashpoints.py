@@ -1,0 +1,342 @@
+"""Crash-point state machine over the pipelined redundancy lifecycle.
+
+PR3 made the tick a pipeline: a due tick *speculatively dispatches* an
+overlapped Algorithm-1 update, later ticks *lazily adopt* its results (or
+*coalesce* into it while in flight), and deadlines/scrubs *force a
+blocking resolve*.  Each of those phases is a distinct interleaving a
+crash can land in — and the paper's shadow protocol claims every one of
+them is safe: the persisted ``(data, checksums, parity, dirty, shadow)``
+tuple is always either fully covered or conservatively marked.
+
+This module proves it by construction:
+
+1. :class:`ProtectedStore` exposes host-level **phase hooks**
+   (``add_phase_hook``) that fire at every lifecycle phase with the live
+   redundancy view at that instant.
+2. :class:`CrashPointMachine` drives a deterministic scripted workload,
+   enumerates every fired ``(phase, occurrence)`` pair, and replays the
+   run crashing at each one: the live view at the phase is persisted via
+   :class:`repro.ckpt.CheckpointManager` (the NVM-survives-the-crash
+   analogue — in-flight device work is dropped, exactly like process
+   death), a **fresh** store restores it through ``restore_verified``,
+   and the outcome is classified.
+3. Outcomes are binary and checkable: ``recovered_bitwise`` (data
+   identical, scrub clean, forward progress resumes) or
+   ``lost_within_window`` (every diverging block provably inside the
+   vulnerability window at crash time — the paper's accepted loss mode).
+   Anything else fails the machine.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as B
+from repro.ckpt.checkpoint import CheckpointManager
+
+from .inject import FaultSpec, apply_fault
+from .oracle import vulnerability_window
+
+# Phases the store instruments (docs/testing.md maps them to paper §5 /
+# PR3 pipeline stages).  "adopt" = lazy adoption on a later tick;
+# "adopt_forced" = deadline- or scrub-forced blocking resolve;
+# "coalesce" = a due tick folded into the still-in-flight update
+# (mid-flight); "dispatch" = the speculative overlapped launch.
+CRASH_PHASES = ("init", "on_write", "dispatch", "coalesce", "adopt",
+                "adopt_forced", "blocking_update", "scrub", "tick", "flush",
+                "settle")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StoreState:
+    """Minimal persisted pytree for a raw ProtectedStore run: the protected
+    leaves plus their redundancy state — what NVM holds at a crash."""
+    leaves: Dict[str, jax.Array]
+    red: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashPlan:
+    """Crash at the ``occurrence``-th firing of ``phase`` (0-based)."""
+    phase: str
+    occurrence: int = 0
+
+
+@dataclasses.dataclass
+class CrashOutcome:
+    plan: CrashPlan
+    step: int                               # workload step at the crash
+    classification: str                     # recovered_bitwise | lost_within_window | rejected | FAILED
+    diverged: Dict[str, Set[int]]           # restored-vs-pristine block diffs
+    window: Dict[str, Set[int]]             # vulnerable blocks at crash time
+    scrub_after_flush: int = -1             # mismatches after restart+flush
+
+    @property
+    def ok(self) -> bool:
+        return self.classification in ("recovered_bitwise",
+                                       "lost_within_window")
+
+
+class _CrashNow(Exception):
+    """Raised from a phase hook to emulate process death at that phase."""
+
+    def __init__(self, phase: str, red_live, leaves, step: int):
+        super().__init__(phase)
+        self.phase = phase
+        self.red_live = red_live
+        self.leaves = leaves
+        self.step = step
+
+
+def default_mutate(rng: np.random.Generator, step: int,
+                   leaves: Mapping[str, jax.Array]
+                   ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """Deterministic scripted writes: touch 1-4 random leading-axis rows of
+    every leaf, returning (new_leaves, row-mask events)."""
+    out = dict(leaves)
+    events: Dict[str, jax.Array] = {}
+    for name in sorted(leaves):
+        v = leaves[name]
+        n = v.shape[0]
+        rows = rng.choice(n, size=int(rng.integers(1, min(4, n) + 1)),
+                          replace=False)
+        idx = jnp.asarray(np.sort(rows))
+        out[name] = v.at[idx].add(jnp.asarray(0.25 * step, v.dtype))
+        events[name] = jnp.zeros((n,), bool).at[idx].set(True)
+    return out, events
+
+
+class CrashPointMachine:
+    """Enumerate-and-replay crash consistency over a scripted store run.
+
+    ``make_store`` builds a fresh, identically-configured ProtectedStore
+    (one per replay — a crash kills the process, state machines included);
+    ``make_leaves`` the initial protected pytree.  The workload is
+    ``steps`` iterations of ``mutate`` (seeded rng -> identical writes
+    every replay) + ``on_write`` + ``tick``; ``scrub_every`` forwards to
+    the tick, and steps listed in ``hold_inflight_steps`` pretend the
+    in-flight update is not ready yet (deterministically exercising the
+    coalesce/mid-flight interleavings on a fast device).
+    """
+
+    def __init__(self, make_store: Callable[[], Any],
+                 make_leaves: Callable[[], Dict[str, jax.Array]],
+                 ckpt_dir, *, seed: int = 0, steps: int = 8,
+                 scrub_every: int = 0,
+                 hold_inflight_steps: Sequence[int] = (),
+                 mutate: Callable = default_mutate,
+                 flush_at_end: bool = True):
+        self.make_store = make_store
+        self.make_leaves = make_leaves
+        self.ckpt_dir = str(ckpt_dir)
+        self.seed = int(seed)
+        self.steps = int(steps)
+        self.scrub_every = int(scrub_every)
+        self.hold_inflight_steps = set(int(s) for s in hold_inflight_steps)
+        self.mutate = mutate
+        self.flush_at_end = flush_at_end
+        self._probe_store = None
+
+    def _probe(self):
+        if self._probe_store is None:
+            self._probe_store = self.make_store()
+        return self._probe_store
+
+    # ------------------------------------------------------------- driving
+    @contextlib.contextmanager
+    def _held_readiness(self, active: bool):
+        """Force the non-blocking readiness probe to report 'in flight'."""
+        import repro.core.store as store_mod
+        if not active:
+            yield
+            return
+        orig = store_mod._ready
+        store_mod._ready = lambda x: False
+        try:
+            yield
+        finally:
+            store_mod._ready = orig
+
+    def _drive(self, on_phase: Optional[Callable[[str, dict], None]] = None):
+        """One full scripted run; returns (store, leaves, red, fired).
+
+        ``on_phase(phase, info)`` may raise :class:`_CrashNow`; ``fired``
+        is the ordered list of every phase firing with its occurrence
+        index (the machine's transition log).
+        """
+        store = self.make_store()
+        leaves = self.make_leaves()
+        rng = np.random.default_rng(self.seed)
+        fired: List[Tuple[str, int]] = []
+        counts: Dict[str, int] = {}
+        cur = {"leaves": leaves, "step": 0}
+
+        def hook(phase: str, info: dict):
+            occ = counts.get(phase, 0)
+            counts[phase] = occ + 1
+            fired.append((phase, occ))
+            if on_phase is not None:
+                info = dict(info)
+                info.setdefault("step", cur["step"])
+                info["occurrence"] = occ
+                info["leaves"] = cur["leaves"]
+                on_phase(phase, info)
+
+        store.add_phase_hook(hook)
+        red = store.init(leaves)
+        hook("init", {"red": red})
+        try:
+            for step in range(1, self.steps + 1):
+                cur["step"] = step
+                leaves, events = self.mutate(rng, step, leaves)
+                cur["leaves"] = leaves
+                red = store.on_write(red, events=events)
+                held = step in self.hold_inflight_steps
+                if not held:
+                    # Determinism: a non-held tick must always see the
+                    # in-flight update as ready, regardless of machine
+                    # load — otherwise the adopt-vs-coalesce branch (and
+                    # with it the enumerated crash-point list) would
+                    # depend on real async-copy timing.
+                    for g in store.groups.values():
+                        if getattr(g, "pending", None) is not None:
+                            jax.block_until_ready(g.pending.fits)
+                with self._held_readiness(held):
+                    red, _ = store.tick(
+                        leaves, red, step,
+                        scrub_period=self.scrub_every or None)
+            if self.flush_at_end:
+                red = store.flush(leaves, red, step=self.steps)
+        finally:
+            store.remove_phase_hook(hook)
+        return store, leaves, red, fired
+
+    def enumerate_phases(self) -> List[Tuple[str, int]]:
+        """Dry run: every (phase, occurrence) a crash could land in."""
+        _, _, _, fired = self._drive()
+        return fired
+
+    # ------------------------------------------------------------ crashing
+    def run_crash(self, plan: CrashPlan,
+                  faults: Sequence[FaultSpec] = ()) -> CrashOutcome:
+        """Replay the workload, die at ``plan``, restart, classify.
+
+        ``faults`` are applied to the *persisted* state between death and
+        restart — corruption landing while the process is down.
+        """
+
+        def on_phase(phase: str, info: dict):
+            if phase == plan.phase and info["occurrence"] == plan.occurrence:
+                raise _CrashNow(phase, info.get("red"), info["leaves"],
+                                int(info["step"]))
+
+        try:
+            self._drive(on_phase)
+        except _CrashNow as crash:
+            return self._restart(plan, crash, faults)
+        raise ValueError(
+            f"plan {plan} never fired; enumerate_phases() lists valid "
+            "crash points for this workload")
+
+    def _restart(self, plan: CrashPlan, crash: _CrashNow,
+                 faults: Sequence[FaultSpec]) -> CrashOutcome:
+        """Persist the crash-time view, corrupt it, restore, classify."""
+        pristine = {k: np.asarray(jax.device_get(v))
+                    for k, v in crash.leaves.items()}
+        leaves, red = dict(crash.leaves), dict(crash.red_live)
+        # The window is judged at the instant of death — exactly the
+        # dirty|shadow set the persisted bitmaps encode.  The probe store
+        # is only consulted for static geometry (metas), so one instance
+        # serves every replay.
+        probe_store = self._probe()
+        window = vulnerability_window(probe_store, red)
+        for spec in faults:
+            leaves, red = apply_fault(probe_store.metas, leaves, red, spec)
+        state = StoreState(leaves=dict(leaves), red=red,
+                           step=jnp.asarray(crash.step, jnp.int32))
+        # One directory per replay: the manager's keep-last-k GC must never
+        # collect a checkpoint another replay of this sweep just wrote.
+        mgr = CheckpointManager(
+            f"{self.ckpt_dir}/crash_{plan.phase}_{plan.occurrence}")
+        mgr.save(crash.step, state, blocking=True)
+        # ----- restart: fresh process, fresh store, verified restore -----
+        store2 = self.make_store()
+        struct = jax.eval_shape(lambda: state)
+        restored = mgr.restore_verified(
+            struct, store2,
+            leaves_of=lambda st: st.leaves,
+            replace_leaves=lambda st, lv: dataclasses.replace(
+                st, leaves=dict(lv)),
+            step=crash.step)
+        win_sets = {n: set(np.flatnonzero(m).tolist())
+                    for n, m in window.blocks.items() if m.any()}
+        if restored is None:
+            return CrashOutcome(plan=plan, step=crash.step,
+                                classification="rejected", diverged={},
+                                window=win_sets)
+        diverged = self._block_diff(probe_store, restored.leaves, pristine)
+        in_window = all(
+            window.contains(name, b)
+            for name, blks in diverged.items() for b in blks)
+        # Forward progress: the restarted store must be able to bring the
+        # restored state back to full coverage and a clean scrub.
+        red2 = store2.flush(restored.leaves, restored.red,
+                            step=int(restored.step))
+        scrub_after = store2.scrub_check(restored.leaves, red2)
+        if not diverged:
+            cls = "recovered_bitwise"
+        elif in_window:
+            cls = "lost_within_window"
+        else:
+            cls = "FAILED"
+        if scrub_after != 0:
+            cls = "FAILED"
+        return CrashOutcome(plan=plan, step=crash.step, classification=cls,
+                            diverged=diverged, window=win_sets,
+                            scrub_after_flush=int(scrub_after))
+
+    @staticmethod
+    def _block_diff(store, got: Mapping[str, jax.Array],
+                    want: Mapping[str, np.ndarray]) -> Dict[str, Set[int]]:
+        """Blocks whose restored bits differ from the pristine crash view."""
+        out: Dict[str, Set[int]] = {}
+        for name, meta in store.protected_metas.items():
+            a = np.asarray(jax.device_get(
+                B.to_lanes(jnp.asarray(got[name]), meta)))
+            b = np.asarray(jax.device_get(
+                B.to_lanes(jnp.asarray(want[name]), meta)))
+            bad = np.flatnonzero((a != b).any(axis=1))
+            if bad.size:
+                out[name] = set(int(x) for x in bad)
+        return out
+
+    # -------------------------------------------------------------- sweeps
+    def sweep(self, faults_for: Optional[Callable[[CrashPlan], Sequence[FaultSpec]]] = None,
+              require_phases: Sequence[str] = ()) -> List[CrashOutcome]:
+        """Crash at every enumerated phase occurrence; every outcome must be
+        recoverable or provably lost within the window.
+
+        ``require_phases`` asserts the workload actually exercised the
+        named phases (e.g. the PR3 pipeline set) before sweeping —
+        otherwise a too-tame workload would vacuously pass.
+        """
+        fired = self.enumerate_phases()
+        have = {p for p, _ in fired}
+        missing = set(require_phases) - have
+        if missing:
+            raise AssertionError(
+                f"workload never reached phases {sorted(missing)}; "
+                f"fired={sorted(have)}")
+        outcomes = []
+        for phase, occ in fired:
+            plan = CrashPlan(phase, occ)
+            faults = tuple(faults_for(plan)) if faults_for else ()
+            outcomes.append(self.run_crash(plan, faults))
+        return outcomes

@@ -1,0 +1,267 @@
+"""Seeded, deterministic corruption injector for ProtectedStore state.
+
+Every fault the paper's §5 analysis worries about is expressible as a
+:class:`FaultSpec` applied *functionally* to ``(leaves, red)`` — no
+test-local array surgery.  The injector never mutates dirty bitmaps as a
+side effect (except where the fault *is* a lost dirty bit), so the
+vulnerability-window oracle can classify each fault exactly.
+
+Kinds
+-----
+``data_bitflip``       flip one bit of one uint32 lane of a data block —
+                       the paper's firmware scribble / media SDC.
+``checksum_bitflip``   corrupt a stored per-block checksum (detected by the
+                       meta-checksum, Alg. 1 line 22).
+``parity_bitflip``     corrupt a stored parity lane (silent until a repair
+                       needs that stripe; surfaced by repair verification).
+``meta_bitflip``       corrupt the checksum-of-checksums scalar.
+``torn_write``         a multi-block write that only partially landed and
+                       whose dirty marks were lost (crash between the data
+                       store and the mark): blocks get fresh random bits,
+                       the bitmaps stay clean — scrub must catch all of it.
+``stale_redundancy``   firmware lost a dirty bit: the block's data changed
+                       but dirty|shadow say it did not — redundancy is
+                       silently stale, indistinguishable from corruption.
+
+All randomness flows from the single ``numpy`` generator seeded at
+construction; an injector with the same seed over the same store geometry
+produces the same fault sequence bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks as B
+from repro.core.state import LeafRedundancy
+
+FAULT_KINDS = ("data_bitflip", "checksum_bitflip", "parity_bitflip",
+               "meta_bitflip", "torn_write", "stale_redundancy")
+
+# Adversarial uint32 payloads: float32 NaN/Inf bit patterns and sentinel-ish
+# values.  Injection draws from these (as well as uniform bits) so detection
+# never depends on "corrupt values look random".
+SPECIAL_LANES = np.array([
+    0x7FC00000,  # float32 quiet NaN
+    0x7F800000,  # +Inf
+    0xFF800000,  # -Inf
+    0x7F800001,  # signalling NaN
+    0x00000000,  # zeros (absorbing for XOR mistakes)
+    0xFFFFFFFF,  # all ones
+], dtype=np.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One concrete, replayable fault.
+
+    ``block``/``lane``/``bit`` address the corruption site in block-lane
+    space (see :mod:`repro.core.blocks`); ``blocks`` lists every block a
+    ``torn_write``/``stale_redundancy`` fault touches.  ``payload`` carries
+    the uint32 value XORed/stored at the site, so a spec fully determines
+    the corrupted state.
+    """
+    kind: str
+    leaf: str
+    block: int = -1
+    lane: int = 0
+    bit: int = 0
+    blocks: Tuple[int, ...] = ()
+    payload: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(want one of {FAULT_KINDS})")
+
+    @property
+    def touched_blocks(self) -> Tuple[int, ...]:
+        """Every data block whose *content vs redundancy* this fault skews.
+
+        Checksum/parity/meta faults corrupt redundancy, not data; they
+        report the block (or stripe members) whose protection they weaken.
+        """
+        if self.blocks:
+            return self.blocks
+        if self.block >= 0:
+            return (self.block,)
+        return ()
+
+
+def _lane_view(leaves: Mapping[str, jax.Array], metas, name: str):
+    return B.to_lanes(leaves[name], metas[name])
+
+
+def apply_fault(metas, leaves: Mapping[str, jax.Array],
+                red: Mapping[str, LeafRedundancy], spec: FaultSpec
+                ) -> Tuple[Dict[str, jax.Array], Dict[str, LeafRedundancy]]:
+    """Apply one fault functionally; returns new ``(leaves, red)``.
+
+    ``metas`` maps leaf name -> :class:`repro.core.blocks.BlockMeta` (use
+    ``store.metas``).  Inputs are never mutated.
+    """
+    leaves = dict(leaves)
+    red = dict(red)
+    meta = metas[spec.leaf]
+    if spec.kind == "data_bitflip":
+        lanes = _lane_view(leaves, metas, spec.leaf)
+        word = jnp.uint32(spec.payload) if spec.payload else (
+            jnp.uint32(1) << jnp.uint32(spec.bit))
+        lanes = lanes.at[spec.block, spec.lane].set(
+            lanes[spec.block, spec.lane] ^ word)
+        leaves[spec.leaf] = B.from_lanes(lanes, meta)
+    elif spec.kind == "checksum_bitflip":
+        r = red[spec.leaf]
+        red[spec.leaf] = dataclasses.replace(
+            r, checksums=r.checksums.at[spec.block].set(
+                r.checksums[spec.block] ^ jnp.uint32(spec.payload or (1 << spec.bit))))
+    elif spec.kind == "parity_bitflip":
+        r = red[spec.leaf]
+        sid = spec.block // meta.stripe_data_blocks
+        red[spec.leaf] = dataclasses.replace(
+            r, parity=r.parity.at[sid, spec.lane].set(
+                r.parity[sid, spec.lane] ^ jnp.uint32(spec.payload or (1 << spec.bit))))
+    elif spec.kind == "meta_bitflip":
+        r = red[spec.leaf]
+        red[spec.leaf] = dataclasses.replace(
+            r, meta_ck=r.meta_ck ^ jnp.uint32(spec.payload or (1 << spec.bit)))
+    elif spec.kind in ("torn_write", "stale_redundancy"):
+        # Data changes land, the dirty marks do not: red is left untouched.
+        lanes = _lane_view(leaves, metas, spec.leaf)
+        seed = np.uint32(spec.payload or 0xD15EA5E)
+        for b in spec.touched_blocks:
+            # Deterministic per-block garbage mixing special payloads — a
+            # torn write is *partial*, so only a prefix of lanes flips.
+            n = max(1, meta.lanes_per_block // 4)
+            rng = np.random.default_rng(int(seed) + int(b))
+            vals = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+            k = rng.integers(0, n + 1)
+            vals[:k] = SPECIAL_LANES[rng.integers(0, len(SPECIAL_LANES), size=k)]
+            lanes = lanes.at[b, :n].set(lanes[b, :n] ^ jnp.asarray(vals))
+        leaves[spec.leaf] = B.from_lanes(lanes, meta)
+    else:  # pragma: no cover — guarded by FaultSpec.__post_init__
+        raise AssertionError(spec.kind)
+    return leaves, red
+
+
+class FaultInjector:
+    """Plans and applies deterministic fault sequences over a store.
+
+    One generator (``numpy`` PCG64, seeded once) drives every placement
+    decision; :meth:`plan` with the same seed and store geometry returns
+    the same specs.  Every applied fault is recorded in :attr:`log` so the
+    oracle can audit the run afterwards.
+    """
+
+    def __init__(self, store, seed: int = 0):
+        self.store = store
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.log: List[FaultSpec] = []
+
+    # ------------------------------------------------------------- planning
+    def _leaf_names(self) -> List[str]:
+        return sorted(self.store.protected_metas)
+
+    def plan(self, n: int, kinds: Sequence[str] = ("data_bitflip",),
+             leaf: Optional[str] = None) -> List[FaultSpec]:
+        """Draw ``n`` fault specs over the protected geometry.
+
+        Placement is uniform over blocks/lanes/bits of the chosen leaf (or
+        all protected leaves); ``torn_write`` draws 2-4 consecutive blocks
+        spanning at least one stripe boundary when the leaf allows it.
+        """
+        metas = self.store.protected_metas
+        names = [leaf] if leaf is not None else self._leaf_names()
+        out: List[FaultSpec] = []
+        for _ in range(n):
+            kind = str(self.rng.choice(list(kinds)))
+            name = str(names[self.rng.integers(0, len(names))])
+            meta = metas[name]
+            b = int(self.rng.integers(0, meta.n_blocks))
+            lane = int(self.rng.integers(0, meta.lanes_per_block))
+            bit = int(self.rng.integers(0, 32))
+            payload = 0
+            if self.rng.random() < 0.5:
+                payload = int(SPECIAL_LANES[self.rng.integers(0, len(SPECIAL_LANES))])
+            blocks: Tuple[int, ...] = ()
+            if kind == "torn_write":
+                width = int(self.rng.integers(2, 5))
+                sw = meta.stripe_data_blocks
+                if meta.n_blocks > sw:
+                    # Straddle a stripe boundary: pick a random non-zero
+                    # stripe start B and begin the run 1..width-1 blocks
+                    # before it, so the torn run always spans >= 2 stripes.
+                    bnd = sw * int(self.rng.integers(
+                        1, (meta.n_blocks - 1) // sw + 1))
+                    start = max(0, bnd - int(self.rng.integers(1, width)))
+                else:   # single-stripe leaf: boundary impossible
+                    start = int(self.rng.integers(
+                        0, max(1, meta.n_blocks - width + 1)))
+                blocks = tuple(range(start, min(start + width, meta.n_blocks)))
+            elif kind == "stale_redundancy":
+                blocks = (b,)
+            out.append(FaultSpec(kind=kind, leaf=name, block=b, lane=lane,
+                                 bit=bit, blocks=blocks, payload=payload))
+        return out
+
+    def plan_clean_blocks(self, red, n: int, kinds=("data_bitflip",),
+                          ) -> List[FaultSpec]:
+        """Like :meth:`plan` but place only on blocks *outside* the current
+        vulnerability window (clean per ``dirty | shadow``) — at most one
+        fault per stripe, so every planned fault is detectable AND
+        parity-repairable by construction.  Returns possibly fewer than
+        ``n`` specs when not enough clean stripes exist."""
+        metas = self.store.protected_metas
+        out: List[FaultSpec] = []
+        used_stripes = set()
+        window = {}
+        for name, r in red.items():
+            if name in metas:
+                live = np.asarray(jax.device_get(
+                    jnp.bitwise_or(r.dirty, r.shadow)))
+                window[name] = bits_to_mask(live, metas[name].n_blocks)
+        candidates = []
+        for name, mask in window.items():
+            clean = np.flatnonzero(~mask)
+            for b in clean:
+                candidates.append((name, int(b)))
+        candidates = [candidates[i]
+                      for i in self.rng.permutation(len(candidates))]
+        for name, b in candidates:
+            if len(out) >= n:
+                break
+            sid = (name, b // metas[name].stripe_data_blocks)
+            if sid in used_stripes:
+                continue
+            used_stripes.add(sid)
+            kind = str(self.rng.choice(list(kinds)))
+            out.append(FaultSpec(
+                kind=kind, leaf=name, block=b,
+                lane=int(self.rng.integers(0, metas[name].lanes_per_block)),
+                bit=int(self.rng.integers(0, 32)),
+                blocks=(b,) if kind == "stale_redundancy" else ()))
+        return out
+
+    # ------------------------------------------------------------ injection
+    def inject(self, leaves, red, spec: FaultSpec):
+        """Apply one spec (records it in :attr:`log`)."""
+        self.log.append(spec)
+        return apply_fault(self.store.metas, leaves, red, spec)
+
+    def inject_many(self, leaves, red, specs: Sequence[FaultSpec]):
+        for spec in specs:
+            leaves, red = self.inject(leaves, red, spec)
+        return leaves, red
+
+
+def bits_to_mask(words: np.ndarray, n_bits: int) -> np.ndarray:
+    """Host-side unpack of a packed uint32 bitvector (numpy mirror of
+    :func:`repro.core.bits.unpack`)."""
+    shifts = np.arange(32, dtype=np.uint32)
+    m = ((words[:, None] >> shifts[None, :]) & 1).astype(bool)
+    return m.reshape(-1)[:n_bits]

@@ -1,0 +1,334 @@
+"""Fault-injection & crash-consistency battery (repro.faults).
+
+Proves the paper's §5 delayed-coverage guarantees end to end: every
+injected corruption outside the vulnerability window is detected (and
+single-block ones repaired), every crash point of the pipelined tick is
+bitwise-recoverable, and losses only ever happen provably inside the
+knob-bounded window.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.ckpt.failure import repair_corruption
+from repro.core import ALL, ProtectedStore, RedundancyPolicy
+from repro.core import blocks as B
+from repro.core import mttdl
+from repro.faults import (CrashPlan, CrashPointMachine, FaultInjector,
+                          FaultSpec, check_detection, vulnerability_window)
+from repro.faults.crashpoints import StoreState
+
+SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
+def _leaves():
+    return {"w": jax.random.normal(jax.random.PRNGKey(0), (24, 200),
+                                   jnp.float32),
+            "e": jax.random.normal(jax.random.PRNGKey(1), (16, 64),
+                                   jnp.bfloat16)}
+
+
+def _store(async_on=True, period=2, scrub=0, deadline=0):
+    pol = RedundancyPolicy.single(
+        "vilamb", period_steps=period, scrub_period_steps=scrub,
+        max_vulnerable_steps=deadline, lanes_per_block=128,
+        work_queue_frac=0.5, async_tick=async_on, precompile=False)
+    return ProtectedStore(pol).attach(_leaves())
+
+
+def _clean_state():
+    store = _store()
+    leaves = _leaves()
+    red = store.init(leaves)
+    return store, leaves, red
+
+
+# ------------------------------------------------------------- injector
+def test_injector_deterministic_from_seed():
+    store, _, red = _clean_state()
+    a = FaultInjector(store, seed=7).plan(8, kinds=("data_bitflip",
+                                                    "torn_write"))
+    b = FaultInjector(store, seed=7).plan(8, kinds=("data_bitflip",
+                                                    "torn_write"))
+    assert a == b
+    c = FaultInjector(store, seed=8).plan(8, kinds=("data_bitflip",
+                                                    "torn_write"))
+    assert a != c
+    x = FaultInjector(store, seed=7).plan_clean_blocks(red, 4)
+    y = FaultInjector(store, seed=7).plan_clean_blocks(red, 4)
+    assert x == y
+
+
+def test_data_faults_detected_by_scrub():
+    """Every data-side fault kind on a clean store is caught, exactly."""
+    for kind in ("data_bitflip", "torn_write", "stale_redundancy"):
+        store, leaves, red = _clean_state()
+        inj = FaultInjector(store, seed=SEED)
+        spec = dataclasses.replace(
+            inj.plan(1, kinds=(kind,), leaf="w")[0], block=5,
+            blocks=(5, 6) if kind == "torn_write" else
+            ((5,) if kind == "stale_redundancy" else ()))
+        lv2, red2 = store.inject(leaves, red, spec)
+        mm = store.scrub(lv2, red2)
+        got = set(np.flatnonzero(np.asarray(mm["w"])).tolist())
+        assert got == set(spec.touched_blocks), (kind, got)
+        assert int(np.asarray(mm["e"]).sum()) == 0
+
+
+def test_redundancy_side_faults_caught_by_meta_or_repair():
+    store, leaves, red = _clean_state()
+    # checksum corruption: the block scrubs as mismatching AND the
+    # checksum-of-checksums flags the page
+    _, red_ck = store.inject(leaves, red, FaultSpec(
+        kind="checksum_bitflip", leaf="w", block=3, bit=5))
+    assert not bool(store.verify_meta(red_ck)["w"])
+    mm = store.scrub(leaves, red_ck)
+    assert np.flatnonzero(np.asarray(mm["w"])).tolist() == [3]
+    # meta corruption alone: data scrubs clean, meta check trips
+    _, red_mc = store.inject(leaves, red, FaultSpec(
+        kind="meta_bitflip", leaf="w", bit=1))
+    assert not bool(store.verify_meta(red_mc)["w"])
+    assert sum(int(v.sum()) for v in store.scrub(leaves, red_mc).values()) == 0
+    # parity corruption: silent for scrub, but a repair through that stripe
+    # must produce data the post-repair scrub rejects (never silent success)
+    _, red_par = store.inject(leaves, red, FaultSpec(
+        kind="parity_bitflip", leaf="w", block=8, lane=2, bit=9))
+    lv_bad, _ = store.inject(leaves, red_par, FaultSpec(
+        kind="data_bitflip", leaf="w", block=8, lane=1, bit=1))
+    mm = store.scrub(lv_bad, red_par)
+    repaired, fixed, lost = repair_corruption(store, lv_bad, red_par, mm)
+    assert (fixed, lost) == (1, 0)
+    mm2 = store.scrub(repaired, red_par)
+    assert int(np.asarray(mm2["w"]).sum()) > 0   # bad parity -> bad rebuild
+
+
+# --------------------------------------------------------------- oracle
+@pytest.mark.parametrize("seed", [SEED, SEED + 1, SEED + 2])
+def test_oracle_full_detection_no_false_positives(seed):
+    """Acceptance: 100% detection of single-stripe corruptions outside the
+    window, zero false positives, across seeds."""
+    store = _store(period=2)
+    leaves = _leaves()
+    red = store.init(leaves)
+    rng = np.random.default_rng(seed)
+    for step in range(1, 7):
+        rows = np.sort(rng.choice(24, size=int(rng.integers(1, 4)),
+                                  replace=False))
+        idx = jnp.asarray(rows)
+        leaves = dict(leaves, w=leaves["w"].at[idx].add(0.5))
+        red = store.on_write(red, events={
+            "w": jnp.zeros((24,), bool).at[idx].set(True)})
+        red, _ = store.tick(leaves, red, step)
+    inj = FaultInjector(store, seed=seed)
+    specs = inj.plan_clean_blocks(red, n=5, kinds=("data_bitflip",
+                                                   "stale_redundancy"))
+    assert specs, "workload dirtied every stripe; shrink the write set"
+    window = vulnerability_window(store, red)
+    lv2, red2 = inj.inject_many(leaves, red, specs)
+    rep = check_detection(store, lv2, red2, specs, window=window)
+    assert rep.ok, rep.summary()
+    want = {(s.leaf, b) for s in specs for b in s.touched_blocks}
+    assert sum(len(v) for v in rep.expected.values()) == len(want)
+    assert not any(rep.in_window.values())
+
+
+def test_oracle_in_window_corruption_is_classified_not_flagged():
+    """A corruption under a live dirty mark is invisible to scrub (stale
+    checksum) — the oracle must classify it in-window, not as a miss."""
+    store, leaves, red = _clean_state()
+    red = store.on_write(red, events={
+        "w": jnp.zeros((24,), bool).at[0].set(True)})
+    window = vulnerability_window(store, red)
+    dirty_block = int(np.flatnonzero(window.blocks["w"])[0])
+    spec = FaultSpec(kind="data_bitflip", leaf="w", block=dirty_block,
+                     lane=1, bit=3)
+    lv2, red2 = store.inject(leaves, red, spec)
+    rep = check_detection(store, lv2, red2, [spec], window=window)
+    assert rep.ok
+    assert rep.in_window == {"w": {dirty_block}}
+    assert not rep.expected and not rep.detected.get("w")
+
+
+# -------------------------------------------------------- crash machine
+def _machine(tmp_path, **kw):
+    def make_store():
+        return _store(period=2, deadline=3)
+
+    kw.setdefault("steps", 6)
+    kw.setdefault("scrub_every", 5)
+    kw.setdefault("hold_inflight_steps", (3, 4))
+    return CrashPointMachine(make_store, _leaves, tmp_path, seed=SEED, **kw)
+
+
+def test_crash_sweep_covers_pipeline_and_recovers(tmp_path):
+    """Acceptance: every PR3 tick phase fires and every crash point is
+    bitwise-recoverable (no corruption injected -> no loss allowed)."""
+    m = _machine(tmp_path)
+    outcomes = m.sweep(require_phases=(
+        "dispatch", "coalesce", "adopt", "adopt_forced", "on_write",
+        "tick", "flush"))
+    assert outcomes
+    bad = [o for o in outcomes if o.classification != "recovered_bitwise"]
+    assert not bad, [(o.plan, o.classification, o.diverged) for o in bad]
+    assert all(o.scrub_after_flush == 0 for o in outcomes)
+
+
+def test_crash_corruption_outside_window_repairs(tmp_path):
+    m = _machine(tmp_path)
+    fired = m.enumerate_phases()
+    plan = [CrashPlan(p, o) for p, o in fired if p == "dispatch"][-1]
+    probe = m.run_crash(plan)
+    window_w = probe.window.get("w", set())
+    meta = m._probe().protected_metas["w"]
+    sw = meta.stripe_data_blocks
+    clean = [b for b in range(meta.n_blocks)
+             if all(v // sw != b // sw for v in window_w)]
+    out = m.run_crash(plan, faults=(FaultSpec(
+        kind="data_bitflip", leaf="w", block=clean[0], lane=3, bit=7),))
+    assert out.classification == "recovered_bitwise"
+
+
+def test_crash_corruption_inside_window_is_provably_bounded(tmp_path):
+    m = _machine(tmp_path)
+    fired = m.enumerate_phases()
+    plan = [CrashPlan(p, o) for p, o in fired if p == "dispatch"][-1]
+    probe = m.run_crash(plan)
+    window_w = sorted(probe.window.get("w", set()))
+    assert window_w, "dispatch crash point must hold a non-empty shadow"
+    out = m.run_crash(plan, faults=(FaultSpec(
+        kind="data_bitflip", leaf="w", block=window_w[0], lane=3, bit=7),))
+    assert out.classification == "lost_within_window"
+    assert set(out.diverged.get("w", ())) <= set(window_w)
+    assert out.scrub_after_flush == 0      # forward progress resumes
+
+
+# ----------------------------------------------- restore_verified paths
+def _saved_state(tmp_path, store, leaves, red, step=1):
+    state = StoreState(leaves=dict(leaves), red=dict(red),
+                       step=jnp.asarray(step, jnp.int32))
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(step, state, blocking=True)
+    return mgr, state
+
+
+def _restore(mgr, state, store):
+    return mgr.restore_verified(
+        jax.eval_shape(lambda: state), store,
+        leaves_of=lambda st: st.leaves,
+        replace_leaves=lambda st, lv: dataclasses.replace(
+            st, leaves=dict(lv)))
+
+
+def test_restore_verified_multi_leaf_and_boundary_corruption(tmp_path):
+    """Corruptions across two leaves plus both sides of a parity-group
+    boundary (and the padded last stripe) all repair on restore."""
+    store, leaves, red = _clean_state()
+    red = store.flush(leaves, red)
+    mgr, state = _saved_state(tmp_path, store, leaves, red)
+    meta = store.protected_metas["w"]
+    sw = meta.stripe_data_blocks
+    lv2, red2 = dict(leaves), dict(red)
+    for spec in (
+            FaultSpec(kind="data_bitflip", leaf="w", block=sw - 1, lane=9,
+                      bit=4),                       # last block of stripe 0
+            FaultSpec(kind="data_bitflip", leaf="w", block=sw, lane=0,
+                      bit=31),                      # first block of stripe 1
+            FaultSpec(kind="data_bitflip", leaf="w",
+                      block=meta.n_blocks - 1, lane=2, bit=1),  # padded stripe
+            FaultSpec(kind="data_bitflip", leaf="e", block=0, lane=5,
+                      bit=17)):                     # second leaf
+        lv2, red2 = store.inject(lv2, red2, spec)
+    state_bad = StoreState(leaves=lv2, red=red2, step=state.step)
+    mgr.save(1, state_bad, blocking=True)
+    restored = _restore(mgr, state, store)
+    assert restored is not None
+    rep = mgr.last_restore_report
+    assert rep.step == 1 and rep.repaired_blocks == 4
+    assert rep.tried == [(1, "ok_repaired")]
+    for name in leaves:
+        np.testing.assert_array_equal(np.asarray(restored.leaves[name]),
+                                      np.asarray(leaves[name]))
+
+
+def test_same_parity_group_double_corruption_fails_loudly(tmp_path):
+    """Satellite acceptance: two corrupt stripes-mates must not silently
+    'repair'; repair refuses, warns, and restore falls back a checkpoint."""
+    store, leaves, red = _clean_state()
+    red = store.flush(leaves, red)
+    mgr, state = _saved_state(tmp_path, store, leaves, red, step=1)
+    # newest checkpoint carries the double corruption in stripe 1
+    lv2, red2 = store.inject(leaves, red, FaultSpec(
+        kind="data_bitflip", leaf="w", block=4, lane=3, bit=2))
+    lv2, red2 = store.inject(lv2, red2, FaultSpec(
+        kind="data_bitflip", leaf="w", block=5, lane=8, bit=19))
+    mgr.save(2, StoreState(leaves=lv2, red=red2, step=jnp.asarray(
+        2, jnp.int32)), blocking=True)
+
+    mm = store.scrub(lv2, red2)
+    with pytest.warns(RuntimeWarning, match="share parity group"):
+        _, fixed, lost = repair_corruption(store, lv2, red2, mm)
+    assert (fixed, lost) == (0, 2)
+
+    with pytest.warns(RuntimeWarning, match="share parity group"):
+        restored = _restore(mgr, state, store)
+    assert restored is not None
+    rep = mgr.last_restore_report
+    assert rep.tried == [(2, "unrecoverable"), (1, "ok")]
+    assert rep.step == 1 and rep.lost_blocks == 2
+    np.testing.assert_array_equal(np.asarray(restored.leaves["w"]),
+                                  np.asarray(leaves["w"]))
+
+
+# ------------------------------------------------------------ mttdl glue
+def test_mttdl_measured_reduces_to_closed_form_and_is_monotone():
+    closed = mttdl.mttdl_vilamb(1e9, 12.0, 5)
+    zero_lat = mttdl.mttdl_measured(1e9, 12.0, 5, 1000, 0.0)
+    assert zero_lat == pytest.approx(closed, rel=1e-12)
+    lats = [mttdl.mttdl_measured(1e9, 12.0, 5, 1000, L)
+            for L in (0.0, 1.0, 1e3, 1e6)]
+    assert all(a >= b for a, b in zip(lats, lats[1:]))
+    assert mttdl.mttdl_measured(1e9, 0.0, 5, 1000, 0.0) == float("inf")
+    assert mttdl.detection_latency_stats([]) == {
+        "n": 0, "mean_s": 0.0, "max_s": 0.0}
+    st = mttdl.detection_latency_stats([2, None, 4], step_seconds=0.5)
+    assert st == {"n": 2, "mean_s": 1.5, "max_s": 2.0}
+
+
+# ------------------------------------------------------------ phase hooks
+def test_phase_hooks_fire_and_remove():
+    store, leaves, red = _clean_state()
+    seen = []
+    hook = lambda phase, info: seen.append(phase)
+    store.add_phase_hook(hook)
+    red = store.on_write(red, events={"w": ALL})
+    red, _ = store.tick(leaves, red, 2)
+    red = store.flush(leaves, red, step=2)
+    assert "on_write" in seen and "flush" in seen
+    assert "dispatch" in seen or "blocking_update" in seen
+    store.remove_phase_hook(hook)
+    n = len(seen)
+    store.tick(leaves, red, 4)
+    assert len(seen) == n
+
+
+def test_phase_hooks_skip_under_trace():
+    """A hook must never fire inside a jitted step (host-level only)."""
+    store, leaves, red = _clean_state()
+
+    def boom(phase, info):
+        raise AssertionError(f"hook fired under trace: {phase}")
+
+    store.add_phase_hook(boom)
+
+    @jax.jit
+    def step(red):
+        return store.on_write(red, events={"w": ALL})
+
+    red2 = step(red)      # traces on_write; hook must stay silent
+    store.remove_phase_hook(boom)
+    assert int(np.asarray(red2["w"].dirty).sum()) > 0

@@ -55,6 +55,60 @@ def test_fused_kernel_property(seed, nb, L, sw, data):
     np.testing.assert_array_equal(np.asarray(pr_k), np.asarray(pr_r))
 
 
+# Adversarial lane payloads: float32 NaN/Inf patterns, zeros (XOR
+# absorbing) and saturated words — kernels treat lanes as raw bits, so
+# these must match the oracles exactly, not merely numerically.
+SPECIALS = np.array([0x7FC00000, 0x7F800000, 0xFF800000, 0x7F800001,
+                     0x00000000, 0xFFFFFFFF], dtype=np.uint32)
+
+
+def _special_lanes(nb, L, offset=0):
+    return jnp.asarray(
+        SPECIALS[(np.arange(nb * L) + offset) % len(SPECIALS)]
+        .reshape(nb, L))
+
+
+@pytest.mark.parametrize("nb,L", [(1, 128), (5, 256), (13, 512)])
+def test_checksum_kernel_special_values(nb, L):
+    lanes = _special_lanes(nb, L)
+    k = cops.block_checksums(lanes, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(k), np.asarray(cref.block_checksums(lanes)))
+    # identical NaN-pattern blocks must still checksum differently
+    # (position salting defeats block-swap aliasing)
+    if nb > 1:
+        assert len(set(np.asarray(k).tolist())) == nb
+
+
+@pytest.mark.parametrize("nb,L,sw", [(4, 128, 4), (10, 256, 5)])
+def test_parity_kernel_special_values(nb, L, sw):
+    lanes = _special_lanes(nb, L, offset=1)
+    k = pops.stripe_parity(lanes, stripe_width=sw, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(k), np.asarray(pref.stripe_parity(lanes, sw)))
+
+
+def test_fused_kernel_special_values_and_zero_dirty():
+    """NaN/Inf slabs through the fused kernel: dirty blocks refresh to the
+    oracle's bits, a zero-dirty call is a bitwise no-op."""
+    lanes = _special_lanes(12, 256, offset=2)
+    old_cks = cref.block_checksums(lanes) ^ jnp.uint32(0xDEAD)
+    old_par = pref.stripe_parity(lanes, 4) ^ jnp.uint32(0xBEEF)
+    bd = jnp.zeros(12, bool).at[jnp.array([0, 5, 11])].set(True)
+    sd = jnp.zeros(3, bool).at[jnp.array([0, 1, 2])].set(True)
+    ck_k, pr_k = rops.fused_update(lanes, old_cks, old_par, bd, sd, 4,
+                                   use_pallas=True, interpret=True)
+    ck_r, pr_r = rref.fused_update(lanes, old_cks, old_par, bd, sd, 4)
+    np.testing.assert_array_equal(np.asarray(ck_k), np.asarray(ck_r))
+    np.testing.assert_array_equal(np.asarray(pr_k), np.asarray(pr_r))
+    zd = jnp.zeros(12, bool)
+    ck0, pr0 = rops.fused_update(lanes, old_cks, old_par, zd,
+                                 jnp.zeros(3, bool), 4,
+                                 use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ck0), np.asarray(old_cks))
+    np.testing.assert_array_equal(np.asarray(pr0), np.asarray(old_par))
+
+
 def test_fused_kernel_work_queue_semantics():
     """Clean stripes' outputs must be byte-identical to old values even when
     the kernel never visits them (the work-queue skip, DESIGN.md kernels)."""

@@ -153,7 +153,10 @@ def test_store_tick_dispatches_queued_and_matches_reference():
                 jax.block_until_ready(g.pending.fits)
         if frac > 0:
             g = next(iter(store.groups.values()))
-            assert g.pending is not None and g.pending.queued
+            if store.policy.async_tick:    # overlap: speculation went queued
+                assert g.pending is not None and g.pending.queued
+            else:                          # blocking: exact fit check agreed
+                assert g.predicted_fits
         r1 = store.settle(r1, lv)
         outs.append(r1)
         assert sum(int(v.sum()) for v in store.scrub(lv, r1).values()) == 0
@@ -229,6 +232,117 @@ def test_compact_stripe_ids_contract():
     # kernel convention: pad by repeating the last live id
     ids, count, _ = workqueue.compact_stripe_ids(sd, 6, pad_repeat_last=True)
     assert ids.tolist() == [1, 3, 4, 4, 4, 4]
+
+
+# Adversarial payloads: float32 NaN/Inf bit patterns and saturated words.
+# The redundancy path is pure bit manipulation — special float values must
+# round-trip bitwise and never weaken detection.
+SPECIALS = np.array([0x7FC00000, 0x7F800000, 0xFF800000, 0x7F800001,
+                     0x00000000, 0xFFFFFFFF], dtype=np.uint32)
+
+
+def test_nan_inf_payloads_bitwise_identical_and_detected():
+    """NaN/Inf-laden leaves: queued == full bitwise, scrub stays clean, and
+    a single-bit NaN->Inf flip on a clean block is still caught."""
+    eng, leaves = _mk(frac=0.5)
+    shape = leaves["w"].shape
+    pattern = SPECIALS[np.arange(np.prod(shape)) % len(SPECIALS)]
+    leaves = dict(leaves, w=jnp.asarray(
+        pattern.reshape(shape).view(np.float32)))
+    red = eng.init(leaves)
+    bmask = jnp.zeros((38,), bool).at[jnp.array([0, 1, 17])].set(True)
+    red = {"w": dataclasses.replace(
+        red["w"], dirty=bits.mark(red["w"].dirty, bmask)), "e": red["e"]}
+    # overwrite the dirty blocks with a *different* special pattern
+    meta = eng.metas["w"]
+    lanes = B.to_lanes(leaves["w"], meta)
+    rolled = jnp.asarray(np.roll(SPECIALS, 1)[
+        np.arange(meta.lanes_per_block) % len(SPECIALS)].astype(np.uint32))
+    for b in (0, 1, 17):
+        lanes = lanes.at[b].set(rolled)
+    leaves2 = dict(leaves, w=B.from_lanes(lanes, meta))
+    assert eng.queue_fits(red)
+    out_q = eng.redundancy_step_queued(leaves2, red)
+    _assert_red_equal(out_q, eng.redundancy_step(leaves2, red))
+    assert all(int(v.sum()) == 0 for v in eng.scrub(leaves2, out_q).values())
+    # NaN (0x7FC00000) -> +Inf (0x7F800000) is one bit (22) on a clean block
+    corrupt = B.from_lanes(
+        B.to_lanes(leaves2["w"], meta).at[20, 4].set(
+            B.to_lanes(leaves2["w"], meta)[20, 4] ^ jnp.uint32(1 << 22)),
+        meta)
+    mm = eng.scrub(dict(leaves2, w=corrupt), out_q)
+    assert np.flatnonzero(np.asarray(mm["w"])).tolist() == [20]
+
+
+def test_zero_dirty_update_is_bitwise_noop():
+    """Zero dirty bits: both Algorithm-1 variants and a due store tick must
+    leave every redundancy field bitwise untouched (sentinel-only queues)."""
+    eng, leaves = _mk(frac=0.5)
+    red = eng.init(leaves)
+    _assert_red_equal(eng.redundancy_step(leaves, red), red)
+    _assert_red_equal(eng.redundancy_step_queued(leaves, red), red)
+    for async_on in (True, False):
+        pol = RedundancyPolicy.single(
+            "vilamb", period_steps=1, lanes_per_block=128,
+            work_queue_frac=0.5, async_tick=async_on)
+        store = ProtectedStore(pol).attach(leaves)
+        r0 = store.init(leaves)
+        r0_host = jax.tree.map(np.asarray, r0)  # blocking tick donates r0
+        r1, rep = store.tick(leaves, r0, 1)     # due, nothing dirty
+        assert rep.updated
+        _assert_red_equal(store.settle(r1, leaves), r0_host)
+
+
+def test_exactly_at_capacity_queue_including_partial_stripe():
+    """Dirty stripes == capacity exactly, with the sentinel-adjacent last
+    (partial, 2-block) stripe in the set: queued must match full bitwise."""
+    eng, leaves = _mk(frac=0.5)
+    assert eng.queue_capacity("w") == 5
+    red = eng.init(leaves)
+    # stripes {0, 3, 5, 7, 9}; 9 is the partial last stripe (blocks 36, 37)
+    blks = jnp.array([0, 12, 20, 28, 36, 37])
+    bmask = jnp.zeros((38,), bool).at[blks].set(True)
+    red = {"w": dataclasses.replace(
+        red["w"], dirty=bits.mark(red["w"].dirty, bmask)), "e": red["e"]}
+    meta = eng.metas["w"]
+    lanes = B.to_lanes(leaves["w"], meta)
+    for b in [0, 12, 20, 28, 36, 37]:
+        lanes = lanes.at[b, 0].add(jnp.uint32(b + 1))
+    leaves2 = dict(leaves, w=B.from_lanes(lanes, meta))
+    assert eng.queue_fits(red)
+    out_q = eng.redundancy_step_queued(leaves2, red)
+    _assert_red_equal(out_q, eng.redundancy_step(leaves2, red))
+    assert all(int(v.sum()) == 0 for v in eng.scrub(leaves2, out_q).values())
+    # one more stripe is one too many
+    over = {"w": dataclasses.replace(
+        red["w"], dirty=bits.mark(red["w"].dirty,
+                                  jnp.zeros((38,), bool).at[4].set(True))),
+        "e": red["e"]}
+    assert not eng.queue_fits(over)
+
+
+def test_sentinel_colliding_ids_drop_not_wrap():
+    """ids equal to the sentinel (n_stripes / n_blocks) must be dropped by
+    every scatter — never wrap around or clobber stripe 0."""
+    from repro.core import parity
+    par = jnp.arange(12, dtype=jnp.uint32).reshape(3, 4)
+    deltas = jnp.full((2, 4), 0xFFFFFFFF, jnp.uint32)
+    out = parity.scatter_xor_stripes(
+        par, jnp.asarray([3, 3], jnp.int32), deltas)   # 3 == ns sentinel
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(par))
+    # queued_update with an all-sentinel queue over special-value lanes
+    lanes = jnp.asarray(SPECIALS[np.arange(8 * 128) % len(SPECIALS)]
+                        .reshape(8, 128))
+    old_cks = checksum.block_checksums(lanes)
+    old_par = jnp.zeros((2, 128), jnp.uint32)
+    ids = jnp.full((4,), 2, jnp.int32)                 # 2 == n_stripes here
+    cks, par2, meta = workqueue.queued_update(
+        lanes, old_cks, old_par, checksum.meta_checksum(old_cks),
+        jnp.zeros((8,), bool), ids, 4)
+    np.testing.assert_array_equal(np.asarray(cks), np.asarray(old_cks))
+    np.testing.assert_array_equal(np.asarray(par2), np.asarray(old_par))
+    np.testing.assert_array_equal(
+        np.asarray(meta), np.asarray(checksum.meta_checksum(old_cks)))
 
 
 def test_queued_preserves_scrub_detection():
