@@ -25,9 +25,18 @@ Measured per step over a write+tick loop at period 4:
 
 Both variants settle and drain every dispatched update inside the timed
 window, so the comparison is work-for-work fair.
+
+The ``overlap_sharded/*`` rows repeat the stall comparison on a 2x2x2
+host-device mesh (per-shard work queues, AND-folded fit flag): the
+multi-device run happens in a subprocess because
+``XLA_FLAGS=--xla_force_host_platform_device_count`` must be exported
+before jax is imported.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -35,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import ROW_ELEMS, Region, key_stream
+
+SHARDED_DEVICES = 8
 
 
 def _measure(mode: str, pipelined: bool, steps: int, n_rows: int,
@@ -61,8 +72,101 @@ def _measure(mode: str, pipelined: bool, steps: int, n_rows: int,
     return float(t.mean()), float(np.percentile(t, 99)), wall_us
 
 
+def _measure_sharded(pipelined, steps: int, n_rows: int, batch: int,
+                     period: int, mode: str = "vilamb"):
+    """One sharded stall measurement (runs inside the 8-device child)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import ProtectedStore, RedundancyPolicy
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = P(("pod", "data", "model"), None)
+    pol = RedundancyPolicy.single(mode, period_steps=period,
+                                  async_tick=pipelined)
+    store = ProtectedStore(pol, mesh=mesh).attach(
+        {"heap": jax.ShapeDtypeStruct((n_rows, ROW_ELEMS), jnp.float32)},
+        specs={"heap": spec})
+    heap = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (n_rows, ROW_ELEMS),
+                          jnp.float32), NamedSharding(mesh, spec))
+    red = store.init({"heap": heap}) if store.protects else {}
+    rng = np.random.default_rng(0)
+    all_rows = [jnp.asarray(np.sort(rng.choice(n_rows, batch, replace=False)))
+                for _ in range(steps + 1)]
+    heap = heap.at[all_rows[0]].add(1.0)
+    if store.has_periodic:
+        red = store.flush({"heap": heap}, red)
+    jax.block_until_ready(heap)
+    ticks = []
+    t0 = time.perf_counter()
+    for i, rows in enumerate(all_rows[1:], 1):
+        heap = heap.at[rows].add(1.0)
+        if store.protects:
+            ev = jnp.zeros((n_rows,), bool).at[rows].set(True)
+            red = store.on_write(red, events={"heap": ev})
+        s0 = time.perf_counter()
+        red, _ = store.tick({"heap": heap}, red, i)
+        ticks.append(time.perf_counter() - s0)
+    if store.protects:
+        red = store.settle(red, {"heap": heap})
+    jax.block_until_ready((heap, jax.tree.leaves(red)))
+    wall_us = (time.perf_counter() - t0) / steps * 1e6
+    t = np.asarray(ticks) * 1e6
+    return float(t.mean()), float(np.percentile(t, 99)), wall_us
+
+
+def sharded_child(steps: int, n_rows: int, batch: int, period: int) -> None:
+    """Child entry: print the sharded CSV rows (stdout is the protocol)."""
+    n = _measure_sharded(True, steps, n_rows, batch, period, mode="none")
+    b = _measure_sharded(False, steps, n_rows, batch, period)
+    p = _measure_sharded(True, steps, n_rows, batch, period)
+    noise_us = 5.0
+    ratio = max(b[0] - n[0], noise_us) / max(p[0] - n[0], noise_us)
+    dev = f"{SHARDED_DEVICES} host devices, per-shard queues"
+    for name, us, derived in (
+            ("overlap_sharded/tick_stall_none", n[0],
+             f"p99 {n[1]:.0f} us (baseline; {dev})"),
+            ("overlap_sharded/tick_stall_blocking", b[0],
+             f"p99 {b[1]:.0f} us; per-shard queue_fits round trip"),
+            ("overlap_sharded/tick_stall_pipelined", p[0],
+             f"p99 {p[1]:.0f} us; AND-folded fit flag fetched a tick ahead"),
+            ("overlap_sharded/overhead_reduction", 0.0,
+             f"{ratio:.2f}x sharded foreground stall cut")):
+        print(f"{name},{us:.2f},{derived}")
+
+
+def _sharded_rows(steps: int, n_rows: int, batch: int, period: int):
+    """Spawn the multi-device child and parse its CSV rows.
+
+    Paths are anchored off ``__file__`` (never the caller's cwd) so the
+    rows survive ``python -m benchmarks.run`` launched from anywhere.
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={SHARDED_DEVICES}",
+        PYTHONPATH=os.path.join(root, "src") + os.pathsep
+        + os.environ.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.overlap", "--sharded-child",
+           str(steps), str(n_rows), str(batch), str(period)]
+    try:
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=1800, cwd=root)
+    except Exception as e:  # keep the harness running without the rows
+        return [("overlap_sharded/ERROR", 0.0, f"spawn failed: {e}")]
+    if r.returncode != 0:
+        return [("overlap_sharded/ERROR", 0.0,
+                 f"exit {r.returncode}: {r.stderr.strip()[-200:]}")]
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("overlap_sharded/"):
+            name, us, derived = line.split(",", 2)
+            rows.append((name, float(us), derived))
+    return rows
+
+
 def run(steps: int = 240, n_rows: int = 4096, batch: int = 32,
-        period: int = 4, repeats: int = 2):
+        period: int = 4, repeats: int = 2, sharded_steps: int = 120):
     best = {}
     for name, mode, pipelined in (("none", "none", True),
                                   ("blocking", "vilamb", False),
@@ -91,9 +195,12 @@ def run(steps: int = 240, n_rows: int = 4096, batch: int = 32,
          "wall us/step (device-bound on shared-CPU container)"),
         ("overlap/endtoend_pipelined", p[2],
          "wall us/step (identical device work by construction)"),
-    ]
+    ] + _sharded_rows(sharded_steps, n_rows, batch, period)
 
 
 if __name__ == "__main__":
-    from .common import emit
-    emit(run())
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded-child":
+        sharded_child(*map(int, sys.argv[2:6]))
+    else:
+        from .common import emit
+        emit(run())

@@ -34,7 +34,8 @@ SMOKE_KW = {
     # fig9a capped at 4096 rows; the fig9c sweep keeps its representative
     # region size (sweep_rows default) even in smoke mode — see dirty_cost.
     "dirty_cost": dict(n_rows=4096, iters=10),
-    "overlap": dict(steps=120, n_rows=2048, batch=32, repeats=2),
+    "overlap": dict(steps=120, n_rows=2048, batch=32, repeats=2,
+                    sharded_steps=60),
     "battery": dict(n_rows=1024),
     "mttdl_bench": dict(n_rows=1024, steps=12),
     "kernel_bench": dict(nb=128, L=512),

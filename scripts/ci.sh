@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # One-invocation reproducible verify: deps -> tier-1 tests (both tick
-# modes) -> fault-injection battery -> smoke benchmark + guard.
+# modes) -> multi-device sharded tier (both tick modes) -> fault-injection
+# battery -> smoke benchmark + guard.
 #
 #   bash scripts/ci.sh                 # full pipeline
 #   SKIP_BENCH=1 bash scripts/ci.sh    # tests + fault battery only
@@ -13,16 +14,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== [1/5] dependencies (best-effort) =="
+echo "== [1/6] dependencies (best-effort) =="
 python -m pip install -q hypothesis 2>/dev/null \
     && echo "hypothesis installed" \
     || echo "pip/network unavailable - tests use the bundled fallback shim"
 
-echo "== [2/5] tier-1 test suite (async_tick=1, the default) =="
+echo "== [2/6] tier-1 test suite (async_tick=1, the default) =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ASYNC_TICK=1 \
     python -m pytest -x -q
 
-echo "== [3/5] tier-1 on the blocking tick (REPRO_ASYNC_TICK=0) =="
+echo "== [3/6] tier-1 on the blocking tick (REPRO_ASYNC_TICK=0) =="
 # Every policy that does not pass async_tick explicitly flips to the
 # blocking tick, so crash-point and dispatch regressions hiding behind the
 # overlap pipeline fail CI too.  Files that never construct a
@@ -44,28 +45,43 @@ fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ASYNC_TICK=0 \
     python -m pytest -x -q "${BLOCKING_TARGETS[@]}"
 
-echo "== [4/5] fault-injection battery (crash sweep + oracle, 3 seeds) =="
+echo "== [4/6] multi-device sharded tier (8 host devices, blocking tick) =="
+# Both tick modes run over the sharded tier: step 2 (tier-1) already
+# covers REPRO_ASYNC_TICK=1, so this leg adds only the blocking rerun —
+# the env lever is inherited by the test subprocesses, and the queued x
+# tick-mode matrix inside test_sharded.py additionally pins both modes
+# explicitly.  The sharded tests export their own per-subprocess
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 (the flag must
+# predate the jax import); the outer export covers any future sharded
+# test that runs in-process.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ASYNC_TICK=0 \
+    python -m pytest -x -q tests/test_sharded.py
+
+echo "== [5/6] fault-injection battery (crash sweep + oracle + sharded) =="
 # Deterministic crash-point replay over every pipelined-tick phase plus
-# the vulnerability-window oracle; exit 1 on any unrecoverable crash,
-# missed detection, or false positive (see docs/testing.md).
+# the vulnerability-window oracle, then the same oracle + crash subset on
+# a 2x2x2 mesh-sharded store; exit 1 on any unrecoverable crash, missed
+# detection, or false positive (see docs/testing.md).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.faults --smoke
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
-  echo "== [5/5] smoke benchmark (tiny shapes) + perf artifact + guard =="
+  echo "== [6/6] smoke benchmark (tiny shapes) + perf artifact + guard =="
   # insert_throughput exercises all three policies; dirty_cost sweeps the
   # work-queue dirty-fraction scaling; overlap measures the pipelined vs
-  # blocking tick; mttdl_bench now also reports MTTDL from *measured*
-  # scrub detection latencies (fault injector).  The JSON artifact
-  # (BENCH_PR4.json) is the machine-readable perf trajectory — docs/perf.md.
+  # blocking tick (now incl. the overlap_sharded/* mesh rows, spawned on 8
+  # host devices); mttdl_bench reports MTTDL from *measured* scrub
+  # detection latencies (fault injector).  The JSON artifact
+  # (BENCH_PR5.json) is the machine-readable perf trajectory — docs/perf.md.
   # --repeat 3: per-row best-of-N — the shared container's scheduler can
   # swing multi-ms rows >2x between identical runs; the minimum is stable
   # and a real regression raises it too.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
       --smoke --repeat 3 --only insert_throughput,dirty_cost,overlap,mttdl_bench \
-      --json "${BENCH_JSON:-BENCH_PR4.json}"
+      --json "${BENCH_JSON:-BENCH_PR5.json}"
   # Regression guard: compare key rows against the prior checked-in
   # artifact; >2x slowdowns fail the build (BENCH_GUARD_TOL overrides).
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/bench_guard.py \
-      "${BENCH_JSON:-BENCH_PR4.json}" --baseline BENCH_PR3.json
+      "${BENCH_JSON:-BENCH_PR5.json}" --baseline BENCH_PR4.json
 fi
 echo "== CI OK =="

@@ -89,10 +89,13 @@ def repair_corruption(engine, leaves, red, mismatches) -> tuple:
         ids = np.nonzero(np.asarray(mask))[0]
         if not ids.size:
             continue
-        width = metas[name].stripe_data_blocks
+        from repro.core.blocks import global_stripe_id
+
+        meta = metas[name]
         by_stripe = collections.defaultdict(list)
         for b in ids:
-            by_stripe[int(b) // width].append(int(b))
+            # Global stripe id: parity groups never span shards.
+            by_stripe[global_stripe_id(meta, b)].append(int(b))
         for stripe, blks in sorted(by_stripe.items()):
             if len(blks) > 1:
                 warnings.warn(

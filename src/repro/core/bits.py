@@ -48,6 +48,20 @@ def unpack(words: jax.Array, n_bits: int) -> jax.Array:
     return bits.reshape(-1)[:n_bits].astype(bool)
 
 
+def unpack_rows(words: jax.Array, rows: int, n_bits: int) -> jax.Array:
+    """Unpack ``rows`` concatenated bitvectors into bool[rows, n_bits].
+
+    Sharded redundancy state concatenates one ``n_words(n_bits)`` bitvector
+    per shard along dim 0; each shard's padding bits sit mid-array, so a
+    flat :func:`unpack` of the concatenation would misalign every shard
+    after the first.  This unpacks per row (= per shard).
+    """
+    w = words.reshape(rows, -1)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (w[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(rows, -1)[:, :n_bits].astype(bool)
+
+
 def mark(words: jax.Array, mask: jax.Array) -> jax.Array:
     """OR a bool[n_bits] dirty mask into the packed bitvector."""
     return jnp.bitwise_or(words, pack_mask(mask))

@@ -141,6 +141,48 @@ def stripe_dirty_mask(meta: BlockMeta, block_dirty: jax.Array) -> jax.Array:
                    axis=1)
 
 
+def shard_slice(leaf: jax.Array, meta: BlockMeta, shards: int, shard: int):
+    """View one shard's rows of a dim0-sharded global leaf.
+
+    Sharded redundancy state is addressed in *global block space*: shard
+    ``s``'s local block ``b`` is global block ``s * meta.n_blocks + b``
+    (``meta`` is the shard-local geometry).  Host-side surgery on that
+    space — fault injection, parity reconstruction — needs the shard's
+    local lane view back.  Supported for leading-axis sharding only (the
+    repo's redundancy layout); other specs raise.
+
+    Returns ``(sub_leaf, put)`` where ``put(new_sub)`` writes the modified
+    shard back into a new global leaf.
+    """
+    if shards == 1:
+        return leaf, (lambda new: new)
+    rows = meta.shape[0]
+    if (leaf.shape[0] != rows * shards
+            or tuple(leaf.shape[1:]) != tuple(meta.shape[1:])):
+        raise ValueError(
+            f"global-block addressing needs dim0-only sharding: global "
+            f"{tuple(leaf.shape)} vs local {tuple(meta.shape)} x {shards}")
+    lo = shard * rows
+    sub = leaf[lo:lo + rows]
+
+    def put(new):
+        return leaf.at[lo:lo + rows].set(new)
+
+    return sub, put
+
+
+def global_stripe_id(meta: BlockMeta, block: int) -> int:
+    """Global stripe id of a global block id (shard-local geometry ``meta``).
+
+    Parity groups never span shards, so shard ``s`` owns stripes
+    ``[s * n_stripes, (s+1) * n_stripes)`` — the one formula repair
+    grouping, parity-fault placement, and clean-stripe planning must
+    share (global block space as in :func:`shard_slice`).
+    """
+    s, b = divmod(int(block), meta.n_blocks)
+    return s * meta.n_stripes + b // meta.stripe_data_blocks
+
+
 def block_of_index(meta: BlockMeta, flat_elem_index) -> jax.Array:
     """Block id containing a flat element index (for sparse dirty marking)."""
     lane = flat_elem_index // meta.elems_per_word

@@ -10,7 +10,11 @@ Modes (Table 1 of the paper):
 The engine is machine-local by construction (paper §3.3): when given a mesh
 and per-leaf PartitionSpecs, every redundancy computation runs under
 ``shard_map`` on shard-local blocks with **zero collectives**; checksum,
-parity, and bitvector arrays are sharded alongside their leaf.
+parity, bitvector, and meta-checksum arrays are sharded alongside their
+leaf.  That includes the ∝-dirty work-queue variant (each shard owns a
+fixed-capacity queue sized from its local stripe count) and the overlap
+form, whose per-shard fit flags are AND-folded outside the update program
+(see ``redundancy_step_async``).
 """
 from __future__ import annotations
 
@@ -96,6 +100,10 @@ class RedundancyEngine:
         self.mesh = mesh
         self.specs = dict(specs or {})
         self.metas: Dict[str, BlockMeta] = {}
+        # Global leaf shapes (as handed in); metas below are shard-local.
+        self.global_leaf_structs = {
+            name: jax.ShapeDtypeStruct(tuple(leaf.shape), leaf.dtype)
+            for name, leaf in leaf_structs.items()}
         for name, leaf in leaf_structs.items():
             lshape = _local_shape(leaf.shape, self.specs.get(name), mesh)
             self.metas[name] = blocks.make_meta(
@@ -116,16 +124,29 @@ class RedundancyEngine:
         self._queue_fits_jit = None
 
     # ------------------------------------------------------------------ utils
-    def _shard_factor(self, name: str) -> int:
+    def shard_factor(self, name: str) -> int:
+        """Number of shards a leaf's redundancy arrays concatenate (1 = local)."""
         if self.mesh is None:
             return 1
         return int(np.prod([self.mesh.shape[a] for a in _leaf_axes(self.specs.get(name))]) or 1)
 
+    def _mck_out(self, x: jax.Array) -> jax.Array:
+        """Normalize a meta-checksum for storage: scalar machine-local,
+        ``(1,)`` per shard under a mesh (global ``(k,)``, one honest
+        checksum-of-checksums per shard — a replicated scalar would need a
+        collective to agree)."""
+        return x.reshape((1,)) if self.mesh is not None else x
+
     def red_spec(self, name: str) -> LeafRedundancy:
-        """PartitionSpecs for a leaf's redundancy arrays (dim0-sharded)."""
+        """PartitionSpecs for a leaf's redundancy arrays (dim0-sharded).
+
+        ``meta_ck`` is sharded like the checksums it covers: one scalar per
+        shard (global shape ``(shard_factor,)``) so each shard verifies its
+        own checksum page without collectives.
+        """
         axes = _leaf_axes(self.specs.get(name))
         s = P(axes if axes else None)
-        return LeafRedundancy(checksums=s, parity=s, dirty=s, shadow=s, meta_ck=P())
+        return LeafRedundancy(checksums=s, parity=s, dirty=s, shadow=s, meta_ck=s)
 
     def red_structs(self, global_: bool = True) -> RedundancyState:
         """ShapeDtypeStructs of the redundancy state (global shapes)."""
@@ -133,14 +154,15 @@ class RedundancyEngine:
         for name, meta in self.metas.items():
             st = leaf_red_struct(meta)
             if global_:
-                k = self._shard_factor(name)
+                k = self.shard_factor(name)
                 st = LeafRedundancy(
                     checksums=jax.ShapeDtypeStruct((meta.n_blocks * k,), jnp.uint32),
                     parity=jax.ShapeDtypeStruct(
                         (meta.n_stripes * k, meta.lanes_per_block), jnp.uint32),
                     dirty=jax.ShapeDtypeStruct((meta.n_dirty_words * k,), jnp.uint32),
                     shadow=jax.ShapeDtypeStruct((meta.n_dirty_words * k,), jnp.uint32),
-                    meta_ck=jax.ShapeDtypeStruct((), jnp.uint32),
+                    meta_ck=jax.ShapeDtypeStruct(
+                        (k,) if self.mesh is not None else (), jnp.uint32),
                 )
             out[name] = st
         return out
@@ -180,10 +202,11 @@ class RedundancyEngine:
     def has_queue(self) -> bool:
         """Whether the queued Algorithm-1 variant exists for this engine.
 
-        Machine-local only: under a mesh the host cannot cheaply check the
-        per-shard fit, so dispatchers always take the reference path.
+        Mesh or machine-local alike: under a mesh every shard runs its own
+        fixed-capacity queue (capacity from the *local* stripe count) inside
+        ``shard_map``, and the fit predicate is evaluated per shard.
         """
-        return self.mesh is None and any(self._queue_caps.values())
+        return any(self._queue_caps.values())
 
     def queue_fits(self, red: RedundancyState) -> bool:
         """Host-side overflow check: do all live dirty stripes fit the queues?
@@ -191,6 +214,10 @@ class RedundancyEngine:
         One tiny jitted popcount pass over the bitvectors (O(n_blocks) bits,
         no data read) and a single bool transfer — the cost that buys
         dispatching the ∝-dirty queued program instead of the full one.
+        Under a mesh the per-shard dirty-stripe counts are each checked
+        against the shard-local capacity (the queues are per shard); this
+        exact check is the blocking path's — the overlap pipeline computes
+        the same predicate inside the dispatched program instead.
         """
         if not self.has_queue:
             return False
@@ -202,10 +229,12 @@ class RedundancyEngine:
                     if not cap:
                         continue
                     r = red_l[name]
-                    bd = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow),
-                                     meta.n_blocks)
-                    sd = self._stripe_dirty(meta, bd)
-                    oks.append(workqueue.stripe_fits(sd, cap))
+                    k = self.shard_factor(name)
+                    bd = bits.unpack_rows(jnp.bitwise_or(r.dirty, r.shadow),
+                                          k, meta.n_blocks)
+                    oks.append(jnp.all(jax.vmap(
+                        lambda m: workqueue.stripe_fits(
+                            self._stripe_dirty(meta, m), cap))(bd)))
                 return jnp.all(jnp.stack(oks))
             self._queue_fits_jit = jax.jit(fits)
         return bool(self._queue_fits_jit(red))
@@ -249,7 +278,7 @@ class RedundancyEngine:
                     checksums=cks, parity=par,
                     dirty=jnp.zeros((meta.n_dirty_words,), jnp.uint32),
                     shadow=jnp.zeros((meta.n_dirty_words,), jnp.uint32),
-                    meta_ck=checksum.meta_checksum(cks),
+                    meta_ck=self._mck_out(checksum.meta_checksum(cks)),
                 )
             return out
         fn = self._wrap(local, [self._leaf_specs_dict()], red_in=False)
@@ -362,7 +391,7 @@ class RedundancyEngine:
                     checksums=cks, parity=par,
                     dirty=jnp.zeros_like(snapshot),
                     shadow=jnp.zeros_like(snapshot),
-                    meta_ck=meta_ck,
+                    meta_ck=self._mck_out(meta_ck),
                 )
             return out
 
@@ -423,21 +452,45 @@ class RedundancyEngine:
           :meth:`redundancy_step_queued`'s "never unguarded" contract is
           thus discharged on device.
 
-        Machine-local only — under a mesh use the blocking path.
+        Under a mesh the whole body runs per shard inside ``shard_map``
+        (zero collectives): each shard compacts its own queue, and ``fits``
+        is the **per-shard** flag array (global shape ``(n_devices,)``,
+        sharded over every mesh axis).  The overflow select is per shard
+        too — only the shards whose local queue overflowed keep their
+        snapshot marked.  Dispatchers AND-fold the flags into the single
+        "all shards fit" scalar in a separate tiny program
+        (``ProtectedStore._fits_all_fn``) so this program stays
+        collective-free.
         """
-        assert self.mesh is None, "overlap Algorithm 1 is machine-local"
-        parts, fits_all = self._alg1_parts(leaves, red, queued, want_fits=True)
-        overflowed = jnp.logical_not(fits_all) if queued else jnp.asarray(False)
-        out: RedundancyState = {}
-        for name, (cks, par, meta_ck, snapshot) in parts.items():
-            out[name] = LeafRedundancy(
-                checksums=cks, parity=par,
-                dirty=jnp.zeros_like(snapshot),
-                shadow=jnp.where(overflowed, snapshot,
-                                 jnp.zeros_like(snapshot)),
-                meta_ck=meta_ck,
-            )
-        return out, fits_all
+        def local(ls, red_l):
+            parts, fits_all = self._alg1_parts(ls, red_l, queued,
+                                               want_fits=True)
+            overflowed = (jnp.logical_not(fits_all) if queued
+                          else jnp.asarray(False))
+            out: RedundancyState = {}
+            for name, (cks, par, meta_ck, snapshot) in parts.items():
+                out[name] = LeafRedundancy(
+                    checksums=cks, parity=par,
+                    dirty=jnp.zeros_like(snapshot),
+                    shadow=jnp.where(overflowed, snapshot,
+                                     jnp.zeros_like(snapshot)),
+                    meta_ck=self._mck_out(meta_ck),
+                )
+            if self.mesh is not None:
+                fits_all = fits_all.reshape((1,))
+            return out, fits_all
+
+        if self.mesh is None:
+            return local(dict(leaves), red)
+        axes = tuple(self.mesh.axis_names)
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=(self._leaf_specs_dict(),
+                      {n: self.red_spec(n) for n in self.metas}),
+            out_specs=({n: self.red_spec(n) for n in self.metas}, P(axes)),
+            check_vma=False,
+        )
+        return fn(dict(leaves), red)
 
     # ----------------------------------------------------- sync (Pangolin)
     def sync_update(
@@ -462,7 +515,7 @@ class RedundancyEngine:
                 par = r.parity ^ parity.parity_diff(o, n, meta.stripe_data_blocks)
                 out[name] = LeafRedundancy(
                     checksums=cks, parity=par, dirty=r.dirty, shadow=r.shadow,
-                    meta_ck=checksum.meta_checksum(cks),
+                    meta_ck=self._mck_out(checksum.meta_checksum(cks)),
                 )
             return out
 
@@ -545,36 +598,71 @@ class RedundancyEngine:
         return fn(dict(leaves), red)
 
     def verify_meta(self, red: RedundancyState) -> Dict[str, jax.Array]:
-        """Check the checksum-of-checksums (detects corrupted checksum pages)."""
-        return {
-            name: checksum.meta_checksum(r.checksums) == r.meta_ck
-            for name, r in red.items()
+        """Check the checksum-of-checksums (detects corrupted checksum pages).
+
+        Under a mesh each shard verifies its own checksum page against its
+        own ``meta_ck`` entry inside ``shard_map``; the per-leaf result is
+        the AND over shards (a cold-path fold over ``shard_factor`` bools).
+        """
+        if self.mesh is None:
+            return {
+                name: checksum.meta_checksum(r.checksums) == r.meta_ck
+                for name, r in red.items()
+            }
+
+        def local(red_l):
+            return {
+                name: (checksum.meta_checksum(r.checksums)
+                       == r.meta_ck.reshape(())).reshape((1,))
+                for name, r in red_l.items()
+            }
+
+        out_specs = {
+            n: P(_leaf_axes(self.specs.get(n)) or None) for n in self.metas
         }
+        fn = shard_map(
+            local, mesh=self.mesh,
+            in_specs=({n: self.red_spec(n) for n in self.metas},),
+            out_specs=out_specs, check_vma=False,
+        )
+        per_shard = fn({n: red[n] for n in self.metas})
+        return {name: jnp.all(v) for name, v in per_shard.items()}
 
     # -------------------------------------------------------------- recovery
     def recover_block(
         self, leaf: jax.Array, r: LeafRedundancy, name: str, block_id
     ) -> Tuple[jax.Array, jax.Array]:
-        """Reconstruct one corrupted block from its stripe (shard-local arrays).
+        """Reconstruct one corrupted block from its stripe.
 
         Returns (repaired_leaf, ok). ``ok`` is False when the stripe is
         vulnerable (any *other* member dirty/shadow-set) — the paper's §3.3
         recoverability rule. The paper left recovery unimplemented; we do not.
+
+        ``block_id`` is in global block space; under a mesh it addresses
+        shard ``block_id // meta.n_blocks``, whose local lane view is
+        sliced out for the rebuild (dim0 sharding, see
+        :func:`repro.core.blocks.shard_slice`).
         """
         meta = self.metas[name]
+        k = self.shard_factor(name)
+        par_row = r.parity[blocks.global_stripe_id(meta, block_id)]
+        shard, block_id = divmod(int(block_id), meta.n_blocks)
+        sub, put = blocks.shard_slice(leaf, meta, k, shard)
+        nw = meta.n_dirty_words
+        live = jnp.bitwise_or(r.dirty, r.shadow)[shard * nw:(shard + 1) * nw]
         sid = block_id // meta.stripe_data_blocks
         member_ids = sid * meta.stripe_data_blocks + jnp.arange(meta.stripe_data_blocks)
         in_range = member_ids < meta.n_blocks
-        dmask = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow), meta.n_blocks)
+        dmask = bits.unpack(live, meta.n_blocks)
         member_dirty = jnp.where(
             in_range, dmask[jnp.clip(member_ids, 0, meta.n_blocks - 1)], False)
         others_clean = jnp.all(~member_dirty | (member_ids == block_id))
-        lanes = blocks.to_lanes(leaf, meta)
+        lanes = blocks.to_lanes(sub, meta)
         rebuilt = parity.reconstruct_block(
-            lanes, r.parity[sid], meta.stripe_data_blocks, block_id, sid)
+            lanes, par_row, meta.stripe_data_blocks, block_id, sid)
         new_lanes = lanes.at[block_id].set(
             jnp.where(others_clean, rebuilt, lanes[block_id]))
-        return blocks.from_lanes(new_lanes, meta), others_clean
+        return put(blocks.from_lanes(new_lanes, meta)), others_clean
 
     # ------------------------------------------------------------ accounting
     def vulnerable_masks(self, red: RedundancyState) -> Dict[str, jax.Array]:
@@ -583,27 +671,36 @@ class RedundancyEngine:
         ``dirty | shadow`` unpacked — the exact block set whose redundancy
         is stale (paper §3.3): corruptions landing here are the knob-bounded
         accepted loss; everything outside must be scrub-detectable.  The
-        counts in :meth:`dirty_stats` are reductions of these masks.
+        counts in :meth:`dirty_stats` are reductions of these masks.  Under
+        a mesh the mask is in global block space (per-shard bitvectors
+        unpacked shard by shard, shard ``s`` local block ``b`` at index
+        ``s * n_blocks + b`` — the same layout scrub masks use).
         """
         out: Dict[str, jax.Array] = {}
         for name, meta in self.metas.items():
             r = red[name]
-            out[name] = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow),
-                                    meta.n_blocks)
+            out[name] = bits.unpack_rows(
+                jnp.bitwise_or(r.dirty, r.shadow),
+                self.shard_factor(name), meta.n_blocks).reshape(-1)
         return out
 
     def dirty_stats(self, red: RedundancyState) -> Dict[str, Dict[str, jax.Array]]:
-        """Dirty/vulnerable-stripe counts (feeds §4.7 battery + §4.8 MTTDL)."""
+        """Dirty/vulnerable-stripe counts (feeds §4.7 battery + §4.8 MTTDL).
+
+        Totals are global (local geometry x shard count) so flush sizing and
+        MTTDL see the whole region under a mesh.
+        """
         out = {}
         for name, meta in self.metas.items():
             r = red[name]
+            k = self.shard_factor(name)
             live = jnp.bitwise_or(r.dirty, r.shadow)
-            bdirty = bits.unpack(live, meta.n_blocks)
-            sdirty = self._stripe_dirty(meta, bdirty)
+            bdirty = bits.unpack_rows(live, k, meta.n_blocks)
+            sdirty = jax.vmap(lambda m: self._stripe_dirty(meta, m))(bdirty)
             out[name] = {
                 "dirty_blocks": jnp.sum(bdirty, dtype=jnp.int32),
                 "vulnerable_stripes": jnp.sum(sdirty, dtype=jnp.int32),
-                "total_blocks": meta.n_blocks,
-                "total_stripes": meta.n_stripes,
+                "total_blocks": meta.n_blocks * k,
+                "total_stripes": meta.n_stripes * k,
             }
         return out

@@ -110,7 +110,8 @@ class RedundancyPolicy:
     # ``pipeline_depth=0`` reverts to the blocking tick (exact host-side
     # queue_fits dispatch); depth counts in-flight updates per group — 1 is
     # the implemented maximum, deeper requests coalesce.  Mesh-sharded
-    # groups always take the blocking path.  Defaults to the env lever
+    # groups overlap too: per-shard fit flags are AND-folded on device and
+    # fetched one tick ahead.  Defaults to the env lever
     # ``REPRO_ASYNC_TICK`` (scripts/ci.sh runs the suite both ways).
     async_tick: bool = dataclasses.field(default_factory=_async_tick_default)
     pipeline_depth: int = 1
@@ -221,6 +222,12 @@ def _ready(x) -> bool:
         return bool(x.is_ready())
     except AttributeError:      # non-jax stand-ins (tests) are always ready
         return True
+
+
+def _fits_host(x) -> bool:
+    """Host fold of a fetched fit signal: scalar (machine-local / already
+    AND-folded) or per-shard flag array alike."""
+    return bool(np.asarray(x).all())
 
 
 @dataclasses.dataclass
@@ -425,6 +432,17 @@ class ProtectedStore:
                 return g.engine
         return None
 
+    def shard_factor(self, name: str) -> int:
+        """Shards a leaf's redundancy arrays concatenate (1 = machine-local).
+
+        Global block space for sharded leaves: shard ``s``'s local block
+        ``b`` is global block ``s * meta.n_blocks + b`` — the indexing
+        scrub masks, ``vulnerable_masks``, fault injection, and
+        ``recover_block`` share.
+        """
+        eng = self.engine_for(name)
+        return 1 if eng is None else eng.shard_factor(name)
+
     def _protected(self) -> List[_Group]:
         return [g for g in self.groups.values() if g.engine is not None]
 
@@ -519,10 +537,14 @@ class ProtectedStore:
 
     # --------------------------------------------------- dispatch machinery
     def _async_group(self, g: _Group) -> bool:
-        """Does this group take the overlap-pipelined tick path?"""
+        """Does this group take the overlap-pipelined tick path?
+
+        Mesh-sharded groups qualify too: the per-shard fit flags are
+        AND-folded on device and fetched one tick ahead, exactly like the
+        machine-local scalar.
+        """
         return (g.engine is not None and g.policy.mode == "vilamb"
-                and self.policy.async_tick and self.policy.pipeline_depth > 0
-                and g.engine.mesh is None)
+                and self.policy.async_tick and self.policy.pipeline_depth > 0)
 
     def _build_update(self, label: str, variant: str):
         """Un-lowered jitted Algorithm-1 program for one group.
@@ -563,18 +585,40 @@ class ProtectedStore:
         full program are ready before the first overlapped dispatch.  This
         was the `fig1_insert` threads8 collapse — warmup traffic fit the
         work queue, steady state overflowed, and the full variant's ~200 ms
-        compile landed inside the measured loop.  Machine-local groups
-        only; returns ``self`` for chaining.
+        compile landed inside the measured loop.
+
+        Mesh-sharded groups are warmed too, lowered against the group's
+        declared shardings (leaves per their PartitionSpecs, redundancy per
+        ``red_shardings``); callers of a precompiled mesh store must hand
+        ``tick``/``flush`` arrays sharded that way — pass
+        ``precompile=False`` to keep fully flexible jit dispatch instead.
+        Returns ``self`` for chaining.
         """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
         for g in self._protected():
-            if g.policy.mode != "vilamb" or g.engine.mesh is not None:
+            if g.policy.mode != "vilamb":
                 continue
             eng = g.engine
-            leaf_structs = {
-                n: jax.ShapeDtypeStruct(eng.metas[n].shape,
-                                        jnp.dtype(eng.metas[n].dtype))
-                for n in g.names}
-            red_structs = {n: leaf_red_struct(eng.metas[n]) for n in g.names}
+            if eng.mesh is None:
+                leaf_structs = {
+                    n: jax.ShapeDtypeStruct(eng.metas[n].shape,
+                                            jnp.dtype(eng.metas[n].dtype))
+                    for n in g.names}
+                red_structs = {n: leaf_red_struct(eng.metas[n])
+                               for n in g.names}
+            else:
+                leaf_structs = {
+                    n: jax.ShapeDtypeStruct(
+                        s.shape, s.dtype,
+                        sharding=NamedSharding(eng.mesh,
+                                               eng.specs.get(n, P())))
+                    for n, s in eng.global_leaf_structs.items()}
+                red_structs = jax.tree.map(
+                    lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                       sharding=sh),
+                    eng.red_structs(global_=True), eng.red_shardings(),
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
             # Async groups also warm the blocking pair: flush (the
             # latency-critical preemption path) still dispatches it.
             variants = (("async_full", "async_queued", "full", "queued")
@@ -592,17 +636,34 @@ class ProtectedStore:
                 # otherwise — a ~50 ms stall inside the first overlapped
                 # dispatch).  A real call on the tiny bitvectors both
                 # compiles it and keeps the fast C++ dispatch path.
-                words = {n: bits.zeros(eng.metas[n].n_blocks)
-                         for n in g.names}
+                if eng.mesh is None:
+                    words = {n: bits.zeros(eng.metas[n].n_blocks)
+                             for n in g.names}
+                else:
+                    shardings = eng.red_shardings()
+                    words = {
+                        n: jax.device_put(
+                            jnp.zeros((eng.metas[n].n_dirty_words
+                                       * eng.shard_factor(n),), jnp.uint32),
+                            shardings[n].dirty)
+                        for n in g.names}
+                    # ...and the per-shard fit-flag AND-fold.
+                    ndev = int(np.prod(list(eng.mesh.shape.values())))
+                    flags = jax.device_put(
+                        jnp.ones((ndev,), bool),
+                        NamedSharding(eng.mesh,
+                                      P(tuple(eng.mesh.axis_names))))
+                    jax.block_until_ready(self._fits_all_fn(g.label)(flags))
                 jax.block_until_ready(self._swap_fn(g.label)(words, words))
         return self
 
     def _dispatch_blocking(self, g: _Group, sub, red_sub):
-        """Blocking dispatch (flush / legacy tick / mesh groups): queued
-        program when the live dirty stripes fit the work queues — an exact,
-        host-side ``queue_fits`` round trip — full recompute otherwise;
-        bitwise-identical either way.  The exact fit answer doubles as a
-        free speculation seed for later overlapped dispatches."""
+        """Blocking dispatch (flush / legacy ``async_tick=False`` tick):
+        queued program when the live dirty stripes fit the work queues — an
+        exact, host-side ``queue_fits`` round trip (per-shard counts under
+        a mesh) — full recompute otherwise; bitwise-identical either way.
+        The exact fit answer doubles as a free speculation seed for later
+        overlapped dispatches."""
         queued = g.engine.has_queue and g.engine.queue_fits(red_sub)
         g.predicted_fits = queued or not g.engine.has_queue
         return self._update_fn(g.label, "queued" if queued else "full")(
@@ -615,18 +676,43 @@ class ProtectedStore:
 
         Not donated: its inputs are usually still being produced by the
         step just dispatched, and a donated dispatch would block on them.
+
+        Under a mesh the outputs are pinned to the bitvectors' shardings:
+        the fresh epoch-B zeros are a constant, so GSPMD would otherwise
+        freely re-shard them (replicated) and the precompiled update
+        program would reject the mismatched live view.
         """
         key = (label, "swap")
         fn = self._jit_misc.get(key)
         if fn is None:
-            names = self.groups[label].names
+            g = self.groups[label]
+            names = g.names
 
             def swap(dirty, shadow):
                 snaps = {n: jnp.bitwise_or(dirty[n], shadow[n]) for n in names}
                 fresh = {n: jnp.zeros_like(dirty[n]) for n in names}
                 return snaps, fresh
 
-            fn = self._jit_misc[key] = jax.jit(swap)
+            kw = {}
+            if g.engine is not None and g.engine.mesh is not None:
+                sh = {n: g.engine.red_shardings()[n].dirty for n in names}
+                kw["out_shardings"] = (sh, sh)
+            fn = self._jit_misc[key] = jax.jit(swap, **kw)
+        return fn
+
+    def _fits_all_fn(self, label: str):
+        """Tiny jitted AND-fold of a mesh group's per-shard fit flags into
+        the single device-side "all shards fit" scalar.
+
+        Kept out of the Algorithm-1 program on purpose: folding a
+        cross-shard predicate needs a (one-bool) collective, and the update
+        programs must lower collective-free.  Dispatched asynchronously —
+        the scalar is then fetched exactly like the machine-local one.
+        """
+        key = (label, "fits_all")
+        fn = self._jit_misc.get(key)
+        if fn is None:
+            fn = self._jit_misc[key] = jax.jit(jnp.all)
         return fn
 
     def _dispatch_async(self, g: _Group, sub, red_sub, step: int, *,
@@ -650,6 +736,10 @@ class ProtectedStore:
             {n: red_sub[n].dirty for n in g.names},
             {n: red_sub[n].shadow for n in g.names})
         out_red, fits = self._update_fn(g.label, variant)(sub, red_sub)
+        if g.engine.mesh is not None:
+            # Per-shard flags -> one device-side scalar (separate tiny
+            # program; the update itself lowers collective-free).
+            fits = self._fits_all_fn(g.label)(fits)
         if hasattr(fits, "copy_to_host_async"):
             fits.copy_to_host_async()
         g.pending = _Pending(red=out_red, fits=fits, queued=queued, step=step)
@@ -679,7 +769,7 @@ class ProtectedStore:
             return red_sub, False, 0
         if not wait and not _ready(p.fits):
             return None, False, 0
-        fits = bool(np.asarray(p.fits))
+        fits = _fits_host(p.fits)
         g.predicted_fits = fits
         out = {n: dataclasses.replace(p.red[n], dirty=red_sub[n].dirty)
                for n in g.names}
@@ -715,7 +805,7 @@ class ProtectedStore:
                 repaired, fits = self._update_fn(g.label, "async_full")(
                     {n: leaves[n] for n in g.names},
                     {n: out[n] for n in g.names})
-                g.predicted_fits = bool(np.asarray(fits))
+                g.predicted_fits = _fits_host(fits)
                 out.update(repaired)
         if self._phase_hooks:
             self._phase("settle", red=dict(out))
@@ -1007,12 +1097,15 @@ class ProtectedStore:
         """Apply one ``repro.faults.FaultSpec`` functionally (test/CI hook).
 
         The store is the façade for fault injection too: corruptions are
-        placed in block-lane space against this store's exact geometry,
-        never via test-local array surgery.  Returns new ``(leaves, red)``;
-        inputs are untouched.
+        placed in block-lane space against this store's exact geometry —
+        global block space under a mesh (the owning shard's slice is
+        corrupted) — never via test-local array surgery.  Returns new
+        ``(leaves, red)``; inputs are untouched.
         """
         from repro.faults.inject import apply_fault
-        return apply_fault(self.metas, leaves, red, spec)
+        return apply_fault(self.metas, leaves, red, spec,
+                           factors={n: self.shard_factor(n)
+                                    for n in self.metas})
 
     def vulnerable_masks(self, red: RedundancyState) -> Dict[str, jax.Array]:
         """Per-leaf bool[n_blocks] masks of the instantaneous vulnerability

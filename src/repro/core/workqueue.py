@@ -26,6 +26,12 @@ Instead :func:`queued_update` assumes the caller has already checked
 the store's tick — a host loop by construction — dispatches either the
 queued or the full jitted program.  Both produce bitwise-identical results
 on their shared domain, so the fallback never changes semantics.
+
+Everything here is shard-oblivious on purpose: under a mesh the engine
+calls these helpers *inside* ``shard_map``, so each shard compacts its own
+queue over its local stripes (capacity derived from the local stripe
+count) and :func:`stripe_fits` becomes the shard-local flag the overlap
+pipeline AND-folds across shards (see ``engine.redundancy_step_async``).
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
 """CI fault-injection battery:  ``python -m repro.faults [--smoke]``.
 
-Three passes, each seeded and fully deterministic:
+Four passes, each seeded and fully deterministic:
 
 1. **Crash sweep** — enumerate every lifecycle phase the pipelined tick
    fires (speculative dispatch, coalesce/mid-flight, lazy adoption,
@@ -11,12 +11,19 @@ Three passes, each seeded and fully deterministic:
    restore) and one inside it (loss must be provably within the window).
 3. **Oracle** — scrub over injected single-stripe corruptions must detect
    100% outside the window with zero false positives, across >= 3 seeds.
+4. **Sharded** — the same oracle + a crash-point subset on a 2x2x2
+   mesh-sharded store (8 forced host devices, spawned as a subprocess so
+   ``XLA_FLAGS`` lands before the jax import): faults placed through
+   global block geometry on non-zero shards must be detected by the
+   owning shard's scrub, and mid-pipeline crashes must recover bitwise.
 
 Exit status 1 on any violation, so ``scripts/ci.sh`` fails the build.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import tempfile
 import time
@@ -141,13 +148,110 @@ def oracle_pass(seed: int, steps: int) -> int:
     return 0 if ok else 1
 
 
+def sharded_child(seed: int, steps: int) -> int:
+    """Runs inside the 8-device subprocess: sharded oracle + crash subset."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    specs = {"w": P(("pod", "data", "model"), None)}
+
+    def make_leaves():
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 2048), jnp.float32)
+        return {"w": jax.device_put(w, NamedSharding(mesh, specs["w"]))}
+
+    def make_store():
+        # precompile=False: crash replays restore *unsharded* host arrays,
+        # which the sharding-pinned AOT executables would reject.
+        pol = RedundancyPolicy.single(
+            "vilamb", period_steps=2, max_vulnerable_steps=3,
+            lanes_per_block=128, work_queue_frac=0.5, async_tick=True,
+            precompile=False)
+        return ProtectedStore(pol, mesh=mesh).attach(make_leaves(),
+                                                     specs=specs)
+
+    fails = 0
+    # -- oracle over global block geometry (multiple shards must be hit) --
+    store = make_store()
+    leaves = make_leaves()
+    inj = FaultInjector(store, seed=seed)
+    rng = np.random.default_rng(seed)
+    red = store.init(leaves)
+    for step in range(1, steps + 1):
+        rows = rng.choice(64, size=int(rng.integers(1, 4)), replace=False)
+        idx = jnp.asarray(np.sort(rows))
+        leaves = dict(leaves, w=leaves["w"].at[idx].add(0.5))
+        ev = jnp.zeros((64,), bool).at[idx].set(True)
+        red = store.on_write(red, events={"w": ev})
+        red, _ = store.tick(leaves, red, step)
+    spec_list = inj.plan_clean_blocks(red, n=6, kinds=("data_bitflip",
+                                                      "stale_redundancy"))
+    nb = store.protected_metas["w"].n_blocks
+    shards_hit = {s.block // nb for s in spec_list}
+    window = vulnerability_window(store, red)
+    leaves2, red2 = inj.inject_many(leaves, red, spec_list)
+    report = check_detection(store, leaves2, red2, spec_list, window=window)
+    ok = report.ok and len(shards_hit) > 1
+    print(f"  sharded oracle seed={seed}: {report.summary()} "
+          f"shards_hit={sorted(shards_hit)} {'OK' if ok else 'FAIL'}")
+    fails += 0 if ok else 1
+    # -- crash-point subset on the sharded overlap pipeline --
+    with tempfile.TemporaryDirectory() as tmp:
+        machine = CrashPointMachine(
+            make_store, make_leaves, tmp, seed=seed, steps=steps,
+            scrub_every=5, hold_inflight_steps=(3, 4))
+        fired = machine.enumerate_phases()
+        plans = []
+        for ph in ("dispatch", "coalesce", "adopt", "adopt_forced", "flush"):
+            occ = [o for p, o in fired if p == ph]
+            if occ:
+                plans.append(CrashPlan(ph, occ[-1]))
+        for plan in plans:
+            out = machine.run_crash(plan)
+            print(f"  sharded crash @{plan.phase}#{plan.occurrence}: "
+                  f"{out.classification} {'OK' if out.ok else 'FAIL'}")
+            fails += 0 if out.ok else 1
+    return fails
+
+
+def sharded_pass(seed: int, steps: int) -> int:
+    """Spawn the sharded battery under 8 forced host devices.
+
+    ``XLA_FLAGS`` must be set before jax is imported, so this re-execs the
+    module rather than re-configuring the already-initialized backend.
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.faults", "--sharded-child",
+             "--seeds", str(seed), "--steps", str(steps)],
+            env=env, capture_output=True, text=True, timeout=1800)
+    except Exception as e:   # timeout/OSError: count it, keep the summary
+        print(f"  sharded battery subprocess FAILED ({e!r})")
+        return 1
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stdout.write(r.stderr[-4000:])
+        print(f"  sharded battery subprocess FAILED (exit {r.returncode})")
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
                    help="CI budget: 1 crash-sweep seed, 3 oracle seeds")
     p.add_argument("--seeds", type=int, default=3)
     p.add_argument("--steps", type=int, default=6)
+    p.add_argument("--no-sharded", action="store_true",
+                   help="skip the multi-device (subprocess) battery")
+    p.add_argument("--sharded-child", action="store_true",
+                   help=argparse.SUPPRESS)   # internal: runs in-process
     args = p.parse_args(argv)
+
+    if args.sharded_child:
+        return sharded_child(args.seeds, args.steps)
 
     t0 = time.time()
     fails = 0
@@ -161,6 +265,9 @@ def main(argv=None) -> int:
     print("== vulnerability-window oracle ==")
     for seed in range(max(args.seeds, 3)):
         fails += oracle_pass(seed, args.steps)
+    if not args.no_sharded:
+        print("== sharded battery (2x2x2 mesh, 8 host devices) ==")
+        fails += sharded_pass(0, args.steps)
     dt = time.time() - t0
     print(f"== fault battery {'OK' if not fails else f'FAILED ({fails})'} "
           f"in {dt:.1f}s ==")

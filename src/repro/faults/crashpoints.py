@@ -257,8 +257,10 @@ class CrashPointMachine:
         # serves every replay.
         probe_store = self._probe()
         window = vulnerability_window(probe_store, red)
+        factors = {n: probe_store.shard_factor(n) for n in probe_store.metas}
         for spec in faults:
-            leaves, red = apply_fault(probe_store.metas, leaves, red, spec)
+            leaves, red = apply_fault(probe_store.metas, leaves, red, spec,
+                                      factors=factors)
         state = StoreState(leaves=dict(leaves), red=red,
                            step=jnp.asarray(crash.step, jnp.int32))
         # One directory per replay: the manager's keep-last-k GC must never
@@ -305,16 +307,26 @@ class CrashPointMachine:
     @staticmethod
     def _block_diff(store, got: Mapping[str, jax.Array],
                     want: Mapping[str, np.ndarray]) -> Dict[str, Set[int]]:
-        """Blocks whose restored bits differ from the pristine crash view."""
+        """Blocks whose restored bits differ from the pristine crash view.
+
+        Global block ids: sharded leaves are diffed shard by shard through
+        each shard's local lane view (the metas are shard-local geometry).
+        """
         out: Dict[str, Set[int]] = {}
+        factor = getattr(store, "shard_factor", lambda n: 1)
         for name, meta in store.protected_metas.items():
-            a = np.asarray(jax.device_get(
-                B.to_lanes(jnp.asarray(got[name]), meta)))
-            b = np.asarray(jax.device_get(
-                B.to_lanes(jnp.asarray(want[name]), meta)))
-            bad = np.flatnonzero((a != b).any(axis=1))
-            if bad.size:
-                out[name] = set(int(x) for x in bad)
+            k = int(factor(name))
+            ga, gb = jnp.asarray(got[name]), jnp.asarray(want[name])
+            bad_all: Set[int] = set()
+            for s in range(k):
+                a = np.asarray(jax.device_get(
+                    B.to_lanes(B.shard_slice(ga, meta, k, s)[0], meta)))
+                b = np.asarray(jax.device_get(
+                    B.to_lanes(B.shard_slice(gb, meta, k, s)[0], meta)))
+                bad = np.flatnonzero((a != b).any(axis=1)) + s * meta.n_blocks
+                bad_all.update(int(x) for x in bad)
+            if bad_all:
+                out[name] = bad_all
         return out
 
     # -------------------------------------------------------------- sweeps

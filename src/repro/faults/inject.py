@@ -26,6 +26,15 @@ Kinds
 All randomness flows from the single ``numpy`` generator seeded at
 construction; an injector with the same seed over the same store geometry
 produces the same fault sequence bit for bit.
+
+Mesh-sharded stores are addressed through **global block geometry**:
+``FaultSpec.block`` (and every id in ``blocks``) indexes
+``shard * meta.n_blocks + local_block`` over the shard-local metas — the
+same space scrub masks, ``vulnerable_masks``, and ``recover_block`` use.
+``apply_fault`` resolves the owning shard and performs the lane surgery on
+that shard's slice of the (dim0-sharded) global arrays, so a fault planned
+on shard 3 corrupts shard 3's bits and must be detected by shard 3's local
+scrub — never by a neighbour's.
 """
 from __future__ import annotations
 
@@ -92,57 +101,84 @@ class FaultSpec:
         return ()
 
 
-def _lane_view(leaves: Mapping[str, jax.Array], metas, name: str):
-    return B.to_lanes(leaves[name], metas[name])
-
-
 def apply_fault(metas, leaves: Mapping[str, jax.Array],
-                red: Mapping[str, LeafRedundancy], spec: FaultSpec
+                red: Mapping[str, LeafRedundancy], spec: FaultSpec,
+                factors: Optional[Mapping[str, int]] = None
                 ) -> Tuple[Dict[str, jax.Array], Dict[str, LeafRedundancy]]:
     """Apply one fault functionally; returns new ``(leaves, red)``.
 
     ``metas`` maps leaf name -> :class:`repro.core.blocks.BlockMeta` (use
-    ``store.metas``).  Inputs are never mutated.
+    ``store.metas``).  ``factors`` maps leaf name -> shard count for
+    mesh-sharded leaves (``store.shard_factor``; absent/1 = machine-local):
+    block ids are then interpreted in global block space and the surgery
+    lands on the owning shard's slice.  Inputs are never mutated.
     """
     leaves = dict(leaves)
     red = dict(red)
     meta = metas[spec.leaf]
+    k = int((factors or {}).get(spec.leaf, 1))
+
+    def owner(block):
+        """(shard, local_block) for a global id — loud on a bad factor."""
+        s, b = divmod(int(block), meta.n_blocks)
+        if not 0 <= s < k:
+            raise ValueError(
+                f"{spec.leaf}: global block {block} addresses shard {s} but "
+                f"the leaf has {k} shard(s) — pass factors= "
+                "(store.shard_factor) when injecting into a sharded store")
+        return s, b
+
+    def shard_lanes(block):
+        """(shard, local_block, lanes_of_shard, put_back) for a global id."""
+        s, b = owner(block)
+        sub, put = B.shard_slice(leaves[spec.leaf], meta, k, s)
+        return s, b, B.to_lanes(sub, meta), (
+            lambda lanes: put(B.from_lanes(lanes, meta)))
+
     if spec.kind == "data_bitflip":
-        lanes = _lane_view(leaves, metas, spec.leaf)
+        _, b, lanes, put = shard_lanes(spec.block)
         word = jnp.uint32(spec.payload) if spec.payload else (
             jnp.uint32(1) << jnp.uint32(spec.bit))
-        lanes = lanes.at[spec.block, spec.lane].set(
-            lanes[spec.block, spec.lane] ^ word)
-        leaves[spec.leaf] = B.from_lanes(lanes, meta)
+        lanes = lanes.at[b, spec.lane].set(lanes[b, spec.lane] ^ word)
+        leaves[spec.leaf] = put(lanes)
     elif spec.kind == "checksum_bitflip":
+        # Global checksums concatenate shard-locally, so the global block
+        # id indexes the global array directly (owner() validates it).
+        owner(spec.block)
         r = red[spec.leaf]
         red[spec.leaf] = dataclasses.replace(
             r, checksums=r.checksums.at[spec.block].set(
                 r.checksums[spec.block] ^ jnp.uint32(spec.payload or (1 << spec.bit))))
     elif spec.kind == "parity_bitflip":
+        owner(spec.block)
         r = red[spec.leaf]
-        sid = spec.block // meta.stripe_data_blocks
+        sid = B.global_stripe_id(meta, spec.block)
         red[spec.leaf] = dataclasses.replace(
             r, parity=r.parity.at[sid, spec.lane].set(
                 r.parity[sid, spec.lane] ^ jnp.uint32(spec.payload or (1 << spec.bit))))
     elif spec.kind == "meta_bitflip":
         r = red[spec.leaf]
-        red[spec.leaf] = dataclasses.replace(
-            r, meta_ck=r.meta_ck ^ jnp.uint32(spec.payload or (1 << spec.bit)))
+        word = jnp.uint32(spec.payload or (1 << spec.bit))
+        if r.meta_ck.ndim:        # sharded: one meta checksum per shard
+            s = owner(spec.block)[0] if spec.block >= 0 else 0
+            mck = r.meta_ck.at[s].set(r.meta_ck[s] ^ word)
+        else:
+            mck = r.meta_ck ^ word
+        red[spec.leaf] = dataclasses.replace(r, meta_ck=mck)
     elif spec.kind in ("torn_write", "stale_redundancy"):
         # Data changes land, the dirty marks do not: red is left untouched.
-        lanes = _lane_view(leaves, metas, spec.leaf)
         seed = np.uint32(spec.payload or 0xD15EA5E)
-        for b in spec.touched_blocks:
+        for gb in spec.touched_blocks:
+            _, b, lanes, put = shard_lanes(gb)
             # Deterministic per-block garbage mixing special payloads — a
             # torn write is *partial*, so only a prefix of lanes flips.
             n = max(1, meta.lanes_per_block // 4)
-            rng = np.random.default_rng(int(seed) + int(b))
+            rng = np.random.default_rng(int(seed) + int(gb))
             vals = rng.integers(0, 2**32, size=n, dtype=np.uint32)
-            k = rng.integers(0, n + 1)
-            vals[:k] = SPECIAL_LANES[rng.integers(0, len(SPECIAL_LANES), size=k)]
+            kk = rng.integers(0, n + 1)
+            vals[:kk] = SPECIAL_LANES[rng.integers(0, len(SPECIAL_LANES), size=kk)]
             lanes = lanes.at[b, :n].set(lanes[b, :n] ^ jnp.asarray(vals))
-        leaves[spec.leaf] = B.from_lanes(lanes, meta)
+            leaves[spec.leaf] = put(lanes)
     else:  # pragma: no cover — guarded by FaultSpec.__post_init__
         raise AssertionError(spec.kind)
     return leaves, red
@@ -167,6 +203,13 @@ class FaultInjector:
     def _leaf_names(self) -> List[str]:
         return sorted(self.store.protected_metas)
 
+    def _factor(self, name: str) -> int:
+        fn = getattr(self.store, "shard_factor", None)
+        return int(fn(name)) if fn is not None else 1
+
+    def _factors(self) -> Dict[str, int]:
+        return {n: self._factor(n) for n in self.store.protected_metas}
+
     def plan(self, n: int, kinds: Sequence[str] = ("data_bitflip",),
              leaf: Optional[str] = None) -> List[FaultSpec]:
         """Draw ``n`` fault specs over the protected geometry.
@@ -174,6 +217,9 @@ class FaultInjector:
         Placement is uniform over blocks/lanes/bits of the chosen leaf (or
         all protected leaves); ``torn_write`` draws 2-4 consecutive blocks
         spanning at least one stripe boundary when the leaf allows it.
+        Sharded leaves are addressed in global block space: placement is
+        uniform over every shard's blocks, and a torn run never crosses a
+        shard boundary (shards are separate failure domains).
         """
         metas = self.store.protected_metas
         names = [leaf] if leaf is not None else self._leaf_names()
@@ -182,7 +228,8 @@ class FaultInjector:
             kind = str(self.rng.choice(list(kinds)))
             name = str(names[self.rng.integers(0, len(names))])
             meta = metas[name]
-            b = int(self.rng.integers(0, meta.n_blocks))
+            k = self._factor(name)
+            b = int(self.rng.integers(0, meta.n_blocks * k))
             lane = int(self.rng.integers(0, meta.lanes_per_block))
             bit = int(self.rng.integers(0, 32))
             payload = 0
@@ -192,17 +239,21 @@ class FaultInjector:
             if kind == "torn_write":
                 width = int(self.rng.integers(2, 5))
                 sw = meta.stripe_data_blocks
+                base = (b // meta.n_blocks) * meta.n_blocks  # owning shard
                 if meta.n_blocks > sw:
                     # Straddle a stripe boundary: pick a random non-zero
                     # stripe start B and begin the run 1..width-1 blocks
-                    # before it, so the torn run always spans >= 2 stripes.
+                    # before it, so the torn run always spans >= 2 stripes
+                    # (shard-local ids, offset into the shard's block range).
                     bnd = sw * int(self.rng.integers(
                         1, (meta.n_blocks - 1) // sw + 1))
                     start = max(0, bnd - int(self.rng.integers(1, width)))
                 else:   # single-stripe leaf: boundary impossible
                     start = int(self.rng.integers(
                         0, max(1, meta.n_blocks - width + 1)))
-                blocks = tuple(range(start, min(start + width, meta.n_blocks)))
+                blocks = tuple(
+                    base + lb
+                    for lb in range(start, min(start + width, meta.n_blocks)))
             elif kind == "stale_redundancy":
                 blocks = (b,)
             out.append(FaultSpec(kind=kind, leaf=name, block=b, lane=lane,
@@ -224,7 +275,8 @@ class FaultInjector:
             if name in metas:
                 live = np.asarray(jax.device_get(
                     jnp.bitwise_or(r.dirty, r.shadow)))
-                window[name] = bits_to_mask(live, metas[name].n_blocks)
+                window[name] = bits_to_mask(live, metas[name].n_blocks,
+                                            shards=self._factor(name))
         candidates = []
         for name, mask in window.items():
             clean = np.flatnonzero(~mask)
@@ -235,7 +287,8 @@ class FaultInjector:
         for name, b in candidates:
             if len(out) >= n:
                 break
-            sid = (name, b // metas[name].stripe_data_blocks)
+            meta = metas[name]
+            sid = (name, B.global_stripe_id(meta, b))
             if sid in used_stripes:
                 continue
             used_stripes.add(sid)
@@ -251,7 +304,8 @@ class FaultInjector:
     def inject(self, leaves, red, spec: FaultSpec):
         """Apply one spec (records it in :attr:`log`)."""
         self.log.append(spec)
-        return apply_fault(self.store.metas, leaves, red, spec)
+        return apply_fault(self.store.metas, leaves, red, spec,
+                           factors=self._factors())
 
     def inject_many(self, leaves, red, specs: Sequence[FaultSpec]):
         for spec in specs:
@@ -259,9 +313,15 @@ class FaultInjector:
         return leaves, red
 
 
-def bits_to_mask(words: np.ndarray, n_bits: int) -> np.ndarray:
+def bits_to_mask(words: np.ndarray, n_bits: int, shards: int = 1) -> np.ndarray:
     """Host-side unpack of a packed uint32 bitvector (numpy mirror of
-    :func:`repro.core.bits.unpack`)."""
+    :func:`repro.core.bits.unpack`).
+
+    ``shards > 1``: ``words`` concatenates one bitvector per shard (each
+    padded to whole uint32 words); the result is the global block-space
+    mask of length ``shards * n_bits``.
+    """
     shifts = np.arange(32, dtype=np.uint32)
-    m = ((words[:, None] >> shifts[None, :]) & 1).astype(bool)
-    return m.reshape(-1)[:n_bits]
+    w = words.reshape(shards, -1)
+    m = ((w[:, :, None] >> shifts[None, None, :]) & 1).astype(bool)
+    return m.reshape(shards, -1)[:, :n_bits].reshape(-1)

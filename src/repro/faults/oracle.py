@@ -57,20 +57,25 @@ def vulnerability_window(store, red) -> VulnerabilityWindow:
     """The exact current window from the epoch double-buffer state.
 
     ``dirty | shadow`` per protected leaf, unpacked host-side; the stripe
-    view uses the same block->stripe reduction as Algorithm 1.
+    view uses the same block->stripe reduction as Algorithm 1.  Sharded
+    leaves unpack shard by shard into global block/stripe space (shard
+    ``s``'s local block ``b`` at ``s * n_blocks + b`` — the injector's and
+    scrub's addressing).
     """
     blocks: Dict[str, np.ndarray] = {}
     stripes: Dict[str, np.ndarray] = {}
     metas = store.protected_metas
+    factor = getattr(store, "shard_factor", lambda n: 1)
     for name, meta in metas.items():
         r = red[name]
+        k = int(factor(name))
         live = np.asarray(jax.device_get(jnp.bitwise_or(r.dirty, r.shadow)))
-        bmask = bits_to_mask(live, meta.n_blocks)
+        bmask = bits_to_mask(live, meta.n_blocks, shards=k)
         blocks[name] = bmask
-        padded = np.zeros(meta.padded_blocks, bool)
-        padded[:meta.n_blocks] = bmask
-        stripes[name] = padded.reshape(meta.n_stripes,
-                                       meta.stripe_data_blocks).any(axis=1)
+        padded = np.zeros((k, meta.padded_blocks), bool)
+        padded[:, :meta.n_blocks] = bmask.reshape(k, meta.n_blocks)
+        stripes[name] = padded.reshape(
+            k * meta.n_stripes, meta.stripe_data_blocks).any(axis=1)
     return VulnerabilityWindow(blocks=blocks, stripes=stripes)
 
 

@@ -162,3 +162,21 @@ def memory_analysis_dict(compiled) -> Dict[str, float]:
         if v is not None:
             out[k] = int(v)
     return out
+
+
+def assert_no_collectives(compiled_or_text, where: str = "program") -> None:
+    """Assert a lowered/compiled program contains zero collective ops.
+
+    The machine-locality acceptance check (paper §3.3, in contrast to
+    Tvarak's cross-node offload): every sharded redundancy program —
+    Algorithm 1 full, queued, and the overlap (async) variants — must
+    lower to purely shard-local HLO.  Accepts a compiled executable, a
+    ``jax.stages.Lowered``, or raw (partitioned) HLO text.
+    """
+    txt = compiled_or_text
+    if not isinstance(txt, str):
+        if hasattr(txt, "compile"):          # Lowered -> Compiled
+            txt = txt.compile()
+        txt = txt.as_text()
+    found = sorted({op for op in COLLECTIVES if op in txt})
+    assert not found, f"{where}: collectives in lowered HLO: {found}"

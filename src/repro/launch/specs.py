@@ -134,8 +134,12 @@ def build_train_setup(
     red_struct: Any = {}
     red_shard: Any = {}
     if mode != "none":
+        # Dry-run builder: skip attach-time AOT warmup (it would compile
+        # every sharded Algorithm-1 variant just to lower the step); live
+        # runs call store.warmup() once real sharded arrays exist.
         policy = RedundancyPolicy.single(mode, period_steps=period_steps,
-                                         use_kernels=use_kernels)
+                                         use_kernels=use_kernels,
+                                         precompile=False)
         store = ProtectedStore(policy, mesh=mesh).attach(
             prot_struct, specs=prot_specs)
         red_struct = store.red_structs()
@@ -210,7 +214,8 @@ def build_decode_setup(
     red_struct: Any = {}
     red_shard: Any = {}
     if mode != "none":
-        policy = RedundancyPolicy.single(mode, use_kernels=use_kernels)
+        policy = RedundancyPolicy.single(mode, use_kernels=use_kernels,
+                                         precompile=False)  # dry-run builder
         store = ProtectedStore(policy, mesh=mesh).attach(flat_c, specs=c_specs)
         red_struct = store.red_structs()
         red_shard = store.red_shardings() if mesh is not None else {}

@@ -1,0 +1,109 @@
+"""Shared multi-device subprocess harness.
+
+Multi-device tests need ``XLA_FLAGS=--xla_force_host_platform_device_count``
+exported *before* jax is imported, so every such test runs its body in a
+subprocess.  This module is the one place that test-side snippet
+plumbing lives (test_sharded.py and test_faults.py reuse it) — tests
+supply the body and a success marker instead of copy-pasting
+``subprocess.run`` calls.  (The benchmarks' ``overlap_sharded`` child and
+``repro.faults``' sharded leg spawn their own subprocesses: shipped code
+cannot import from tests/.)
+
+``MESH_PRELUDE`` is the canonical 2x2x2 sharded-store fixture: two leaves
+("w" fully sharded over pod x data x model, "e" sharded over pod x data and
+replicated over model), a sparse scripted writer, and the bitwise
+red-state comparator.  Geometry is sized so "w" has a live per-shard work
+queue (local stripes 32, capacity 16 at frac 0.5) while "e" is too small
+to compact (capacity 0) — both paths stay exercised in one store.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 900,
+           env: dict | None = None) -> subprocess.CompletedProcess:
+    """Run dedented ``code`` under ``devices`` forced host devices."""
+    full_env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=SRC)
+    full_env.update(env or {})
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          env=full_env, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+def run_snippet(code: str, marker: str, devices: int = 8, timeout: int = 900,
+                env: dict | None = None, prelude: str = "",
+                ) -> subprocess.CompletedProcess:
+    """``run_py`` + assert the success marker was printed (with diagnostics).
+
+    ``prelude`` (e.g. :data:`MESH_PRELUDE`) is prepended *after* the body
+    is dedented — naive string concatenation would leave the body indented
+    relative to the margin-level prelude, and Python would happily parse
+    it into the prelude's last suite instead of running it.
+    """
+    r = run_py(prelude + textwrap.dedent(code), devices=devices,
+               timeout=timeout, env=env)
+    assert marker in r.stdout, (
+        f"marker {marker!r} missing (exit {r.returncode})\n"
+        f"--- stdout ---\n{r.stdout[-3000:]}\n"
+        f"--- stderr ---\n{r.stderr[-6000:]}")
+    return r
+
+
+MESH_PRELUDE = """
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import ProtectedStore, RedundancyPolicy
+from repro.launch.mesh import make_mesh
+
+MESH = make_mesh((2, 2, 2), ("pod", "data", "model"))
+SPECS = {"w": P(("pod", "data", "model"), None), "e": P(("pod", "data"), None)}
+FIELDS = ("checksums", "parity", "dirty", "shadow", "meta_ck")
+
+def make_leaves():
+    return {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 2048), jnp.float32),
+            "e": jax.random.normal(jax.random.PRNGKey(1), (16, 1024), jnp.bfloat16)}
+
+def put(lv):
+    return {k: jax.device_put(v, NamedSharding(MESH, SPECS[k])) for k, v in lv.items()}
+
+def mesh_store(mesh=MESH, frac=0.5, period=2, **kw):
+    pol = RedundancyPolicy.single("vilamb", period_steps=period,
+                                  lanes_per_block=128, work_queue_frac=frac, **kw)
+    return ProtectedStore(pol, mesh=mesh).attach(
+        make_leaves(), specs=SPECS if mesh is not None else None)
+
+def drive(store, steps=8, seed=0):
+    rng = np.random.default_rng(seed)
+    lv = put(make_leaves()) if store.mesh is not None else make_leaves()
+    red = store.init(lv)
+    for step in range(1, steps + 1):
+        rows = rng.choice(64, size=int(rng.integers(1, 4)), replace=False)
+        idx = jnp.asarray(np.sort(rows))
+        lv = dict(lv, w=lv["w"].at[idx].add(0.25 * step))
+        ev = jnp.zeros((64,), bool).at[idx].set(True)
+        red = store.on_write(red, events={"w": ev})
+        # Determinism: every due tick must see the in-flight update as
+        # ready (adopt, never coalesce), independent of machine load.
+        for g in store.groups.values():
+            if getattr(g, "pending", None) is not None:
+                jax.block_until_ready(g.pending.fits)
+        red, _ = store.tick(lv, red, step)
+    return lv, red
+
+def assert_red_equal(a, b):
+    for k in a:
+        for f in FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a[k], f)), np.asarray(getattr(b[k], f)),
+                err_msg=f"{k}.{f}")
+"""
