@@ -44,13 +44,17 @@ class Region:
     # artifact.  benchmarks/overlap.py measures the pipelined path
     # explicitly (foreground stall + end-to-end).
     pipelined: bool = False
+    # Scrub patroller byte budget (0 = disabled); benchmarks/scrub_bench.py
+    # and the patrolled MTTDL rows size this to hit a target sweep length.
+    patrol_bytes_per_tick: int = 0
 
     def __post_init__(self):
         self.heap = jnp.zeros((self.n_rows, ROW_ELEMS), jnp.float32)
         policy = RedundancyPolicy.single(
             self.mode, period_steps=self.period,
             lanes_per_block=LANES_PER_BLOCK, stripe_data_blocks=STRIPE,
-            async_tick=self.pipelined)
+            async_tick=self.pipelined,
+            patrol_bytes_per_tick=self.patrol_bytes_per_tick)
         self.store = ProtectedStore(policy).attach({"heap": self.heap})
         self.red = self.store.init({"heap": self.heap})
         self.meta = self.store.metas["heap"]

@@ -39,6 +39,8 @@ SMOKE_KW = {
     "battery": dict(n_rows=1024),
     "mttdl_bench": dict(n_rows=1024, steps=12),
     "kernel_bench": dict(nb=128, L=512),
+    "scrub_bench": dict(steps=24, n_rows=512, sweep_ticks=8,
+                        sharded_steps=8, sharded_rows=128),
 }
 
 
@@ -75,7 +77,7 @@ def main(argv=None) -> None:
 
     from . import (battery, dirty_cost, fio_patterns, insert_throughput,
                    kernel_bench, mttdl_bench, op_latency, overlap,
-                   overwrite_scaling, roofline, ycsb)
+                   overwrite_scaling, roofline, scrub_bench, ycsb)
     from .common import emit
 
     modules = [
@@ -88,6 +90,7 @@ def main(argv=None) -> None:
         ("overlap pipeline", overlap),
         ("sec4.7 battery", battery),
         ("sec4.8 mttdl", mttdl_bench),
+        ("scrub patrol + rebuild", scrub_bench),
         ("kernel fusion", kernel_bench),
         ("roofline", roofline),
     ]

@@ -12,11 +12,18 @@ sub-100 us wall numbers on a shared CPU container are scheduler noise —
 as are derived-only rows (``us_per_call == 0``).  Improvements are
 reported but never fail.
 
-Exit status 1 on any regression, so ``scripts/ci.sh`` fails the build.
+``--require PATTERN`` (repeatable, fnmatch) asserts the fresh artifact
+*contains* at least one row matching each pattern — a presence guard for
+rows whose absence would silently drop coverage (e.g. the multi-device
+``overlap/endtoend_*`` legs falling back to their ERROR row).
+
+Exit status 1 on any regression or missing required row, so
+``scripts/ci.sh`` fails the build.
 """
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import sys
@@ -42,10 +49,23 @@ def main(argv=None) -> int:
     # below that floor is scheduler noise, not signal.
     p.add_argument("--min-us", type=float, default=150.0,
                    help="skip rows whose baseline is below this noise floor")
+    p.add_argument("--require", action="append", default=[],
+                   metavar="PATTERN",
+                   help="fail unless the fresh artifact has >=1 row matching "
+                        "this fnmatch pattern (repeatable)")
     args = p.parse_args(argv)
 
     new = load_rows(args.artifact)
     old = load_rows(args.baseline)
+
+    missing = [pat for pat in args.require
+               if not any(fnmatch.fnmatch(name, pat) for name in new)]
+    if missing:
+        print(f"bench_guard: {args.artifact} is missing required rows:")
+        for pat in missing:
+            print(f"  no row matches {pat!r}")
+        return 1
+
     shared = sorted(set(new) & set(old))
     if not shared:
         print(f"bench_guard: no shared rows between {args.artifact} and "

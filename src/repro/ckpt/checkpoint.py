@@ -45,11 +45,16 @@ class RestoreReport:
     rebuilds on the *returned* candidate; ``lost_blocks`` accumulates the
     unrepairable blocks of *rejected* candidates (the reason they were
     skipped) — the returned checkpoint itself lost nothing.
+    ``unrecoverable`` names those losses: one structured
+    :class:`repro.core.repairs.UnrecoverableBlock` per refused stripe
+    (leaf, global block ids, and whether the stripe was multi-corrupt or
+    vulnerable), so operators see *what* was given up on, not a bare count.
     """
     tried: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
     step: Optional[int] = None
     repaired_blocks: int = 0
     lost_blocks: int = 0
+    unrecoverable: List[Any] = dataclasses.field(default_factory=list)
 
 
 def _path_str(kp) -> str:
@@ -232,10 +237,13 @@ class CheckpointManager:
                 report.tried.append((s, "ok"))
                 report.step = s
                 return state
-            repaired, fixed, lost = store.repair(leaves, red, mm)
+            details: List[Any] = []
+            repaired, fixed, lost = store.repair(leaves, red, mm,
+                                                 details=details)
             if lost:
                 report.tried.append((s, "unrecoverable"))
                 report.lost_blocks += int(lost)
+                report.unrecoverable.extend(details)
                 continue  # vulnerable or multi-corrupt stripe: fall back
             mm2 = store.scrub(repaired, red)
             if sum(int(v.sum()) for v in jax.tree_util.tree_leaves(mm2)) == 0:

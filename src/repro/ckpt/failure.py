@@ -55,13 +55,14 @@ class PreemptionHandler:
         return self._flush_seconds
 
 
-def repair_corruption(engine, leaves, red, mismatches) -> tuple:
+def repair_corruption(engine, leaves, red, mismatches, details=None) -> tuple:
     """Recover every detected-corrupt block from parity (paper left this
     unimplemented; we do not). Returns (repaired_leaves, n_fixed, n_lost).
 
     ``engine`` is anything exposing ``recover_block`` and ``metas`` — a
     RedundancyEngine or a ProtectedStore (which routes each leaf to its
-    owning group).
+    owning group).  The plan/execute split lives in
+    :mod:`repro.core.repairs`, shared with the live scrub patroller.
 
     Two unrecoverable classes are refused *loudly*, never papered over:
 
@@ -73,43 +74,28 @@ def repair_corruption(engine, leaves, red, mismatches) -> tuple:
       plausible-looking garbage while reporting success.  The whole stripe
       is counted lost and a warning names it.
 
-    Callers fall back to checkpoint restore for lost blocks
-    (``CheckpointManager.restore_verified`` does this automatically).
+    ``details`` (optional list) collects one structured
+    :class:`repro.core.repairs.UnrecoverableBlock` per refused stripe —
+    which blocks of which leaf, and why — so reports can name the loss,
+    not just count it.  Callers fall back to checkpoint restore for lost
+    blocks (``CheckpointManager.restore_verified`` does this
+    automatically, and records the details in its ``RestoreReport``).
     """
-    import collections
     import warnings
 
-    import numpy as np
+    from repro.core.repairs import (plan_stripe_repairs, repair_blocks,
+                                    vulnerable_unrecoverable)
 
-    fixed = 0
-    lost = 0
-    leaves = dict(leaves)
-    metas = engine.metas
-    for name, mask in mismatches.items():
-        ids = np.nonzero(np.asarray(mask))[0]
-        if not ids.size:
-            continue
-        from repro.core.blocks import global_stripe_id
-
-        meta = metas[name]
-        by_stripe = collections.defaultdict(list)
-        for b in ids:
-            # Global stripe id: parity groups never span shards.
-            by_stripe[global_stripe_id(meta, b)].append(int(b))
-        for stripe, blks in sorted(by_stripe.items()):
-            if len(blks) > 1:
-                warnings.warn(
-                    f"{name}: {len(blks)} corrupt blocks {blks} share parity "
-                    f"group {stripe}; XOR parity corrects single failures — "
-                    "counting the stripe as lost (restore from checkpoint)",
-                    RuntimeWarning, stacklevel=2)
-                lost += len(blks)
-                continue
-            b = blks[0]
-            repaired, ok = engine.recover_block(leaves[name], red[name], name, b)
-            if bool(ok):
-                leaves[name] = repaired
-                fixed += 1
-            else:
-                lost += 1
-    return leaves, fixed, lost
+    singles, unrec = plan_stripe_repairs(engine.metas, mismatches)
+    for u in unrec:
+        warnings.warn(
+            f"{u.leaf}: {len(u.blocks)} corrupt blocks {list(u.blocks)} share "
+            f"parity group {u.stripe}; XOR parity corrects single failures — "
+            "counting the stripe as lost (restore from checkpoint)",
+            RuntimeWarning, stacklevel=2)
+    leaves, fixed, vulnerable = repair_blocks(engine, leaves, red, singles)
+    unrec = unrec + vulnerable_unrecoverable(engine.metas, vulnerable)
+    if details is not None:
+        details.extend(unrec)
+    lost = sum(len(u.blocks) for u in unrec)
+    return leaves, len(fixed), lost

@@ -10,6 +10,8 @@ from .checksum import (block_checksums, checksum_diff, fmix32, meta_checksum,
 from .engine import ALL, RedundancyConfig, RedundancyEngine
 from .parity import (parity_diff, reconstruct_block, scatter_xor_stripes,
                      stripe_parity, stripe_parity_masked)
+from .repairs import (UNRECOVERABLE_REASONS, UnrecoverableBlock,
+                      plan_stripe_repairs, repair_blocks)
 from .state import LeafRedundancy, RedundancyState, empty_leaf_red
 from .store import (LeafPolicy, ProtectedStore, RedundancyPolicy,
                     StragglerGovernor, TickReport)
@@ -19,10 +21,12 @@ from .workqueue import (compact_stripe_ids, full_update, queue_capacity,
 __all__ = [
     "ALL", "BlockMeta", "LeafPolicy", "LeafRedundancy", "ProtectedStore",
     "RedundancyConfig", "RedundancyEngine", "RedundancyPolicy",
-    "RedundancyState", "StragglerGovernor", "TickReport", "block_checksums",
+    "RedundancyState", "StragglerGovernor", "TickReport",
+    "UNRECOVERABLE_REASONS", "UnrecoverableBlock", "block_checksums",
     "checksum_diff", "compact_stripe_ids", "empty_leaf_red", "fmix32",
     "from_lanes", "full_update", "make_meta", "meta_checksum",
-    "meta_checksum_delta", "parity_diff", "queue_capacity", "queued_update",
-    "reconstruct_block", "scatter_xor_stripes", "stripe_parity",
-    "stripe_parity_masked", "to_lanes",
+    "meta_checksum_delta", "parity_diff", "plan_stripe_repairs",
+    "queue_capacity", "queued_update", "reconstruct_block", "repair_blocks",
+    "scatter_xor_stripes", "stripe_parity", "stripe_parity_masked",
+    "to_lanes",
 ]

@@ -597,6 +597,97 @@ class RedundancyEngine:
         )
         return fn(dict(leaves), red)
 
+    def verify_window_fn(self, name: str, window: int,
+                         want_slab: bool = False) -> Callable:
+        """Bounded patrol probe over one leaf (the scrub patroller's core).
+
+        Returns an **unjitted** callable ``fn(leaf, r, start)`` — callers
+        own jit + caching (``start`` is traced, so one compile per
+        ``(leaf, window, want_slab)`` serves every cursor position).  Per
+        shard it checksums the ``window`` local blocks at ``[start,
+        start + window)`` and compares against the stored per-block
+        checksums, exactly like :meth:`scrub` but over a bounded slab — the
+        per-tick byte budget is ``window * meta.bytes_per_block`` per
+        shard.  Outputs (global shapes, dim0 = shard):
+
+        * ``mism``  bool ``(k, window)`` — clean-and-mismatching (corrupt),
+        * ``clean`` bool ``(k, window)`` — outside the vulnerability window
+          and inside the block range (checksum comparison meaningful),
+        * ``slab``  uint32 ``(k, window, lanes_per_block)`` (only when
+          ``want_slab``) — the raw lanes read anyway, exported so the
+          caller can fold cross-shard parity from the same pass.
+
+        Window positions past ``n_blocks`` are clamped and reported
+        not-clean.  Under a mesh the body runs per shard inside
+        ``shard_map`` with **zero collectives** (the PR 5 program rule);
+        machine-local it is the plain function with ``k == 1``.
+        """
+        meta = self.metas[name]
+        spec = self.specs.get(name, P())
+
+        def local(leaf, r, start):
+            lanes = blocks.to_lanes(leaf, meta)
+            ids = jnp.arange(window, dtype=jnp.int32) + start
+            valid = ids < meta.n_blocks
+            safe = jnp.clip(ids, 0, meta.n_blocks - 1)
+            slab = lanes[safe]
+            # Position-salted: block_offset makes the windowed checksums
+            # comparable to the stored full-leaf ones at the same ids.
+            fresh = checksum.block_checksums(slab, block_offset=start)
+            live = bits.unpack(jnp.bitwise_or(r.dirty, r.shadow),
+                               meta.n_blocks)
+            clean = valid & ~live[safe]
+            mism = clean & (fresh != r.checksums[safe])
+            out = (mism.reshape(1, window), clean.reshape(1, window))
+            if want_slab:
+                out += (slab.reshape(1, window, meta.lanes_per_block),)
+            return out
+
+        if self.mesh is None:
+            return local
+        axes = _leaf_axes(spec)
+        s2 = P(axes) if axes else P(None)
+        out_specs = (s2, s2) + ((s2,) if want_slab else ())
+        return shard_map(
+            local, mesh=self.mesh,
+            in_specs=(spec, self.red_spec(name), P()),
+            out_specs=out_specs, check_vma=False,
+        )
+
+    def live_words_fn(self, name: str) -> Callable:
+        """``fn(r) -> dirty | shadow`` for one leaf — the patroller's
+        per-tick write sample (global packed words, ``(k * n_dirty_words,)``
+        under a mesh).  Unjitted; a tiny elementwise OR, collective-free
+        by construction."""
+        def fn(r):
+            return jnp.bitwise_or(r.dirty, r.shadow)
+        return fn
+
+    def shard_lanes_fn(self, name: str) -> Callable:
+        """``fn(leaf) -> uint32 (k, n_blocks, lanes_per_block)`` — every
+        shard's block-lane view stacked along a fresh leading axis.
+
+        The cross-shard parity primitive: XOR-folding the result over dim0
+        (in a separate tiny program, like ``ProtectedStore._fits_all_fn``)
+        yields one parity row per *local* block covering the same-indexed
+        block of every shard.  Per shard the body is a pure reshape —
+        collective-free; machine-local it returns ``(1, nb, L)``.
+        """
+        meta = self.metas[name]
+        spec = self.specs.get(name, P())
+
+        def local(leaf):
+            lanes = blocks.to_lanes(leaf, meta)
+            return lanes.reshape(1, meta.n_blocks, meta.lanes_per_block)
+
+        if self.mesh is None:
+            return local
+        axes = _leaf_axes(spec)
+        return shard_map(
+            local, mesh=self.mesh, in_specs=(spec,),
+            out_specs=P(axes) if axes else P(None), check_vma=False,
+        )
+
     def verify_meta(self, red: RedundancyState) -> Dict[str, jax.Array]:
         """Check the checksum-of-checksums (detects corrupted checksum pages).
 

@@ -74,6 +74,28 @@ def mttdl_measured(mttf_block: float, vulnerable_stripes: float,
     return 1.0 / denom
 
 
+def mttdl_measured_live(mttf_block: float, vulnerable_stripes: float,
+                        stripe_blocks: int, total_stripes: int,
+                        assumed_latency_seconds: float,
+                        measured: Optional[Mapping[str, float]] = None
+                        ) -> float:
+    """:func:`mttdl_measured` with the latency substituted from a live
+    measurement when one exists.
+
+    ``measured`` is a :func:`detection_latency_stats` dict (e.g. the scrub
+    patroller's ``latency_stats()``); when it records at least one
+    detection (``n > 0``) its mean latency replaces
+    ``assumed_latency_seconds`` (the scheduled-scrub fallback).  This is
+    how the patroller's measured detection latency feeds the reliability
+    model: same closed form, tighter L.
+    """
+    lat = float(assumed_latency_seconds)
+    if measured and int(measured.get("n", 0)) > 0:
+        lat = float(measured["mean_s"])
+    return mttdl_measured(mttf_block, vulnerable_stripes, stripe_blocks,
+                          total_stripes, lat)
+
+
 def detection_latency_stats(latency_steps: Sequence[float],
                             step_seconds: float = 1.0) -> Dict[str, float]:
     """Summarize measured scrub detection latencies (steps -> seconds).

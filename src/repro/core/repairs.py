@@ -1,0 +1,119 @@
+"""Shared stripe-repair planning + execution.
+
+Promoted from the restore-time path (``repro.ckpt.failure``): both
+checkpoint verification and the live scrub patroller (:mod:`repro.scrub`)
+face the same question — given a set of detected-corrupt blocks, which are
+parity-repairable and which stripes must be declared lost?  The planning
+(group by parity stripe, refuse multi-corrupt groups) and the execution
+(``engine.recover_block`` per single-corrupt stripe) live here so the two
+callers cannot drift on the recoverability rule, and both surface the same
+structured :class:`UnrecoverableBlock` records instead of bare counts.
+
+All block/stripe ids are **global** (``shard * n_blocks + local``), the
+same space scrub masks and ``recover_block`` use.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterable, List, Mapping, Tuple
+
+import numpy as np
+
+from .blocks import global_stripe_id
+
+# Why a stripe (or block) was refused repair:
+#   multi_corrupt      >= 2 detected-corrupt blocks share the parity group;
+#                      XOR parity is single-failure-correcting, and
+#                      "repairing" one member from such a stripe would
+#                      fabricate plausible garbage while reporting success.
+#   vulnerable_stripe  another member is dirty/shadow-set, so the stored
+#                      parity is stale there (paper §3.3).
+#   shard_loss         lost with its shard and not reconstructable from
+#                      cross-shard parity (row stale at loss time and never
+#                      rewritten by the foreground afterwards).
+UNRECOVERABLE_REASONS = ("multi_corrupt", "vulnerable_stripe", "shard_loss")
+
+
+@dataclasses.dataclass(frozen=True)
+class UnrecoverableBlock:
+    """Structured loss report: which blocks of which stripe, and why.
+
+    ``stripe`` is the global stripe id (``-1`` when the loss is not
+    stripe-shaped, e.g. a shard-loss remainder); ``blocks`` lists every
+    global block id given up on.
+    """
+    leaf: str
+    stripe: int
+    blocks: Tuple[int, ...]
+    reason: str
+
+    def __post_init__(self):
+        assert self.reason in UNRECOVERABLE_REASONS, self.reason
+
+
+def plan_stripe_repairs(
+    metas, mismatches: Mapping[str, object]
+) -> Tuple[List[Tuple[str, int]], List[UnrecoverableBlock]]:
+    """Group detected-corrupt blocks by parity stripe.
+
+    ``mismatches`` maps leaf name -> bool mask over global block space (any
+    array-like, as produced by ``scrub``) or an iterable of global block
+    ids.  Returns ``(singles, unrecoverable)``: the repair candidates (at
+    most one per stripe, as ``(leaf, global_block)`` pairs) and the stripes
+    refused because XOR parity cannot correct them.
+    """
+    singles: List[Tuple[str, int]] = []
+    unrec: List[UnrecoverableBlock] = []
+    for name, mask in sorted(mismatches.items()):
+        arr = np.asarray(mask)
+        if arr.dtype == np.bool_:
+            ids: Iterable[int] = np.flatnonzero(arr)
+        else:
+            ids = arr.astype(np.int64).ravel()
+        meta = metas[name]
+        by_stripe = collections.defaultdict(list)
+        for b in ids:
+            # Global stripe id: parity groups never span shards.
+            by_stripe[global_stripe_id(meta, int(b))].append(int(b))
+        for stripe, blks in sorted(by_stripe.items()):
+            if len(blks) > 1:
+                unrec.append(UnrecoverableBlock(
+                    name, int(stripe), tuple(blks), "multi_corrupt"))
+            else:
+                singles.append((name, blks[0]))
+    return singles, unrec
+
+
+def repair_blocks(
+    engine, leaves, red, singles: Iterable[Tuple[str, int]]
+) -> Tuple[dict, List[Tuple[str, int]], List[Tuple[str, int]]]:
+    """Parity-rebuild each planned single-corrupt block.
+
+    ``engine`` is anything exposing ``recover_block`` and ``metas`` — a
+    RedundancyEngine or a ProtectedStore (which routes each leaf to its
+    owning group).  Returns ``(leaves, fixed, vulnerable)``: the (new dict,
+    inputs never mutated) leaf map with repairs applied, the repaired
+    ``(leaf, block)`` pairs, and the pairs refused because their stripe was
+    vulnerable (stale parity) at repair time — those may become repairable
+    after the next redundancy update settles, so callers retry or escalate.
+    """
+    leaves = dict(leaves)
+    fixed: List[Tuple[str, int]] = []
+    vulnerable: List[Tuple[str, int]] = []
+    for name, b in singles:
+        repaired, ok = engine.recover_block(leaves[name], red[name], name, b)
+        if bool(ok):
+            leaves[name] = repaired
+            fixed.append((name, int(b)))
+        else:
+            vulnerable.append((name, int(b)))
+    return leaves, fixed, vulnerable
+
+
+def vulnerable_unrecoverable(metas, pairs: Iterable[Tuple[str, int]]
+                             ) -> List[UnrecoverableBlock]:
+    """Wrap refused ``(leaf, block)`` pairs as structured loss records."""
+    return [UnrecoverableBlock(n, global_stripe_id(metas[n], b), (int(b),),
+                               "vulnerable_stripe")
+            for n, b in pairs]

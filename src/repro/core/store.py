@@ -118,6 +118,22 @@ class RedundancyPolicy:
     # AOT-compile every Algorithm-1 variant a group can dispatch at attach
     # time, so the first overlapped dispatch never hides a compile stall.
     precompile: bool = True
+    # Scrub patroller + online shard rebuild (repro.scrub; docs/api.md).
+    # ``patrol_bytes_per_tick`` > 0 enables a continuous low-priority
+    # verify cursor over block space: each probe checksums at most that
+    # many bytes *per shard* per tick (the per-device stall bound — shards
+    # scan in parallel).  Detected corruption is repaired from parity at a
+    # paced ``patrol_repair_per_tick`` blocks per tick.  A wholesale-corrupt
+    # shard (>= ``shard_loss_threshold`` of a probe window's clean blocks
+    # mismatching, at least ``shard_loss_min_blocks`` of them) triggers an
+    # online rebuild from cross-shard parity, paced by
+    # ``rebuild_bytes_per_tick`` (0 = 4x the patrol budget).  Priority:
+    # foreground writes > due redundancy ticks > rebuild > patrol.
+    patrol_bytes_per_tick: int = 0
+    patrol_repair_per_tick: int = 1
+    rebuild_bytes_per_tick: int = 0
+    shard_loss_threshold: float = 0.5
+    shard_loss_min_blocks: int = 4
 
     def leaf_policy(self, name: str) -> LeafPolicy:
         for pattern, lp in self.rules:
@@ -214,6 +230,17 @@ class TickReport:
     # full-recompute fallback ran on resolution).
     coalesced: Tuple[str, ...] = ()
     overflowed: Tuple[str, ...] = ()
+    # Scrub patroller / rebuild (repro.scrub).  ``repaired`` maps leaf name
+    # -> replacement leaf array the caller MUST adopt (parity rebuilds and
+    # shard-rebuild writes happen functionally; the store cannot mutate the
+    # caller's arrays).  ``unrecoverable`` carries structured
+    # repro.core.repairs.UnrecoverableBlock records; ``rebuild`` is the
+    # active repro.scrub.RebuildStatus (None = no rebuild running).
+    patrolled: Tuple[str, ...] = ()
+    patrol_mismatches: int = 0
+    repaired: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    unrecoverable: Tuple[Any, ...] = ()
+    rebuild: Optional[Any] = None
 
 
 def _ready(x) -> bool:
@@ -288,6 +315,9 @@ class ProtectedStore:
         self._jit_update: Dict[Tuple[str, str], Any] = {}
         self._jit_scrub: Dict[str, Any] = {}
         self._jit_misc: Dict[Tuple[str, str], Any] = {}
+        # Scrub patroller (repro.scrub) — built by attach() when the policy
+        # enables it (patrol_bytes_per_tick > 0) and a vilamb group exists.
+        self.patroller: Optional[Any] = None
         # Lifecycle phase hooks (repro.faults): host-level observation
         # points for crash-consistency replay.  Empty list = zero overhead
         # on every hot path (a single truthiness check).
@@ -373,6 +403,12 @@ class ProtectedStore:
         self._jit_misc = {}
         if self.policy.precompile:
             self.warmup()
+        self.patroller = None
+        if self.policy.patrol_bytes_per_tick > 0 and any(
+                g.policy.mode == "vilamb" for g in self._protected()):
+            # Runtime import: repro.scrub builds on repro.core submodules.
+            from repro.scrub import ScrubPatroller
+            self.patroller = ScrubPatroller(self)
         return self
 
     @classmethod
@@ -974,6 +1010,17 @@ class ProtectedStore:
         report.scrubbed = tuple(scrubbed)
         report.coalesced = tuple(coalesced)
         report.overflowed = tuple(overflowed)
+        if self.patroller is not None:
+            # Low-priority background duty, after every foreground decision:
+            # the patroller sees the post-dispatch live view (in-flight
+            # blocks are shadow-marked, so probes conservatively skip them)
+            # and only dispatches a probe on quiet ticks (no update
+            # dispatched) — rebuild, being loss recovery, runs every tick
+            # within its byte budget.  It may repair/rebuild leaves
+            # (report.repaired — callers adopt) and mark rebuilt blocks
+            # dirty in ``out``.
+            self.patroller.on_tick(get_leaves, out, step, report,
+                                   busy=bool(updated))
         if self._phase_hooks:
             self._phase("tick", red=dict(out), step=step, report=report)
         return out, report
@@ -1087,10 +1134,31 @@ class ProtectedStore:
         return engine.recover_block(leaf, r, name, block_id)
 
     def repair(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
-               mismatches: Mapping[str, jax.Array]) -> Tuple[Dict, int, int]:
-        """Parity-rebuild every detected-corrupt block; see failure module."""
+               mismatches: Mapping[str, jax.Array],
+               details: Optional[List[Any]] = None) -> Tuple[Dict, int, int]:
+        """Parity-rebuild every detected-corrupt block; see failure module.
+
+        ``details`` (optional list) collects structured
+        :class:`repro.core.repairs.UnrecoverableBlock` records for every
+        refused stripe."""
         from repro.ckpt.failure import repair_corruption
-        return repair_corruption(self, leaves, red, mismatches)
+        return repair_corruption(self, leaves, red, mismatches,
+                                 details=details)
+
+    def declare_shard_lost(self, name: str, shard: int) -> None:
+        """Tell the patroller a shard of ``name`` is lost (operator signal).
+
+        The patroller normally detects wholesale shard corruption from its
+        own probes (``shard_loss_threshold``); this is the explicit path
+        for known losses (a device dropped out).  Requires the patroller
+        (``RedundancyPolicy.patrol_bytes_per_tick > 0``); the rebuild
+        starts on the next ``tick``.
+        """
+        if self.patroller is None:
+            raise RuntimeError(
+                "declare_shard_lost needs the scrub patroller "
+                "(set RedundancyPolicy.patrol_bytes_per_tick > 0)")
+        self.patroller.declare_shard_lost(name, shard)
 
     def inject(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
                spec) -> Tuple[Dict[str, jax.Array], RedundancyState]:

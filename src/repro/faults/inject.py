@@ -49,7 +49,8 @@ from repro.core import blocks as B
 from repro.core.state import LeafRedundancy
 
 FAULT_KINDS = ("data_bitflip", "checksum_bitflip", "parity_bitflip",
-               "meta_bitflip", "torn_write", "stale_redundancy")
+               "meta_bitflip", "torn_write", "stale_redundancy",
+               "shard_loss")
 
 # Adversarial uint32 payloads: float32 NaN/Inf bit patterns and sentinel-ish
 # values.  Injection draws from these (as well as uniform bits) so detection
@@ -165,6 +166,20 @@ def apply_fault(metas, leaves: Mapping[str, jax.Array],
         else:
             mck = r.meta_ck ^ word
         red[spec.leaf] = dataclasses.replace(r, meta_ck=mck)
+    elif spec.kind == "shard_loss":
+        # Wholesale shard corruption: every lane of one shard's slice is
+        # XOR-scribbled (``spec.block`` = shard index), redundancy left
+        # untouched — the failure domain the online rebuild
+        # (repro.scrub) recovers from via cross-shard parity.
+        s = int(spec.block)
+        if not 0 <= s < k:
+            raise ValueError(
+                f"{spec.leaf}: shard_loss addresses shard {s} but the leaf "
+                f"has {k} shard(s)")
+        sub, put = B.shard_slice(leaves[spec.leaf], meta, k, s)
+        lanes = B.to_lanes(sub, meta)
+        lanes = lanes ^ jnp.uint32(spec.payload or 0xA5A5A5A5)
+        leaves[spec.leaf] = put(B.from_lanes(lanes, meta))
     elif spec.kind in ("torn_write", "stale_redundancy"):
         # Data changes land, the dirty marks do not: red is left untouched.
         seed = np.uint32(spec.payload or 0xD15EA5E)

@@ -1,0 +1,458 @@
+"""Tick-scheduled scrub patroller.
+
+The paper's scheduled scrub (``ProtectedStore.scrub``) reads every block of
+every leaf in one pass — fine at checkpoint boundaries, far too heavy to
+run often, so silent corruption sits latent for most of a scrub period.
+The patroller closes that gap with a **continuous low-priority sweep**: a
+cursor walks local block space and each quiet tick verifies one bounded
+window (``patrol_bytes_per_tick``) of one leaf against its stored
+checksums — the same comparison as scrub, paced so foreground work never
+waits on a full-leaf pass.  Detection latency drops from "next scheduled
+scrub" (hundreds of steps) to "next sweep" (a handful), which feeds the
+measured-MTTDL model (:func:`repro.core.mttdl.mttdl_measured`) directly.
+
+Duty order inside one tick — strictly below the foreground:
+
+1. foreground writes / due redundancy updates (the store's group loop ran
+   before we are called);
+2. online shard rebuild, one bounded window per tick (loss recovery);
+3. paced parity repairs of previously detected blocks;
+4. a patrol probe — only on quiet ticks (no update dispatched) and never
+   while a rebuild is active.
+
+Probes are asynchronous: dispatched at tick ``t`` against the
+post-dispatch live view (in-flight blocks are shadow-marked, so the clean
+mask skips them), fetched non-blocking at ``t+1``.  At most one probe is
+in flight.  Alongside each probe of a dim0-sharded leaf the same pass
+exports the raw lanes, XOR-folded across shards into **cross-shard
+parity** rows (:mod:`repro.scrub.rebuild`) — the patrol traffic doubles as
+rebuild capital.  A tiny per-tick *write sample* (``dirty | shadow``,
+fetched next tick) conservatively invalidates rows written since their
+refresh; samples are processed before probe results each tick, so a stale
+row is never validated over a fresh write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.repairs import (UnrecoverableBlock, plan_stripe_repairs,
+                                repair_blocks, vulnerable_unrecoverable)
+from repro.core.store import _ready
+from repro.faults.inject import bits_to_mask
+
+from .rebuild import CrossShardParity, ShardRebuilder, xor_fold as _xor_fold
+
+# A block is only "repaired-for-sure" once a later probe stops flagging it.
+# recover_block can succeed (stripe clean) yet reconstruct garbage if the
+# corruption raced a parity refresh of its stripe; such blocks re-detect on
+# the next sweep and are retried up to this many times before the stripe is
+# declared lost.
+MAX_REPAIR_ATTEMPTS = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectionEvent:
+    """One patrol detection: leaf, global block id, detection step, and —
+    when the corruption was registered via :meth:`ScrubPatroller.
+    expect_injection` — the measured latency in steps."""
+    leaf: str
+    block: int
+    step: int
+    latency_steps: Optional[int] = None
+
+
+class ScrubPatroller:
+    """Continuous verify-window patrol + online shard rebuild for one
+    :class:`repro.core.ProtectedStore` (built by ``attach`` when
+    ``RedundancyPolicy.patrol_bytes_per_tick > 0``)."""
+
+    def __init__(self, store):
+        self.store = store
+        pol = store.policy
+        self.patrol_bytes = int(pol.patrol_bytes_per_tick)
+        # Patrol targets: every vilamb-protected leaf, round-robin.  The
+        # probe window is static per leaf (one compile serves the sweep).
+        self.targets: List[str] = []
+        self.window: Dict[str, int] = {}
+        self.cursor: Dict[str, int] = {}
+        self.sweeps: Dict[str, int] = {}
+        self.xpar: Dict[str, CrossShardParity] = {}
+        for g in store._protected():
+            if g.policy.mode != "vilamb":
+                continue
+            for name in g.names:
+                meta = store.metas[name]
+                w = max(1, self.patrol_bytes // max(1, meta.bytes_per_block))
+                self.window[name] = min(w, meta.n_blocks)
+                self.cursor[name] = 0
+                self.sweeps[name] = 0
+                self.targets.append(name)
+                eng = store.engine_for(name)
+                k = eng.shard_factor(name)
+                gshape = eng.global_leaf_structs[name].shape
+                # Cross-shard parity needs clean row-contiguous shard
+                # slices: dim0-sharded with an even split (the same
+                # precondition as blocks.shard_slice / recover_block).
+                if (k >= 2 and gshape and gshape[0] % k == 0
+                        and tuple(meta.shape) ==
+                        (gshape[0] // k,) + tuple(gshape[1:])):
+                    self.xpar[name] = CrossShardParity(name, meta.n_blocks)
+        self._primed = False
+        self._jits: Dict[Any, Callable] = {}
+        # In-flight async work: at most one probe; one write sample.
+        self._probe: Optional[Tuple] = None
+        self._sample: Optional[Dict[str, jax.Array]] = None
+        self._ti = 0                       # round-robin target index
+        # Detection / repair bookkeeping ((name, global_block) keyed).
+        self._detected: set = set()
+        self._attempts: Dict[Tuple[str, int], int] = {}
+        self._expected: Dict[Tuple[str, int], int] = {}
+        self._repair_queue: List[List] = []    # [name, gblock, retries]
+        self._pending_loss: List[Tuple[str, int]] = []
+        self.rebuild: Optional[ShardRebuilder] = None
+        # Observability.
+        self.ticks = 0
+        self.blocks_scanned = 0            # local probe positions covered
+        self.detections: List[DetectionEvent] = []
+        self.latencies: List[int] = []     # steps, registered injections only
+        self.unrecoverable: List[UnrecoverableBlock] = []
+
+    # ------------------------------------------------------------- plumbing
+    def engine_of(self, name: str):
+        eng = self.store.engine_for(name)
+        assert eng is not None, name
+        return eng
+
+    def jit(self, key, fn, **kw) -> Callable:
+        f = self._jits.get(key)
+        if f is None:
+            f = jax.jit(fn, **kw)
+            self._jits[key] = f
+        return f
+
+    def fetch_live_rows(self, name: str, r) -> np.ndarray:
+        """Exact (blocking) ``dirty | shadow`` fetch as a bool ``(k, nb)``
+        row mask — writes land before the tick, so a fetch at tick ``t``
+        sees every mark through step ``t``."""
+        meta = self.store.metas[name]
+        k = self.store.shard_factor(name)
+        live = np.asarray(r.dirty) | np.asarray(r.shadow)
+        return bits_to_mask(live, meta.n_blocks,
+                            shards=k).reshape(k, meta.n_blocks)
+
+    def adopt_repair(self, name: str, leaf, overlay, report) -> None:
+        """Surface a repaired/rebuilt leaf: the patroller's own overlay uses
+        it for the rest of the tick, and ``TickReport.repaired`` tells the
+        caller to adopt it (train/serve loops fold it back)."""
+        overlay[name] = leaf
+        report.repaired[name] = leaf
+
+    def _repin(self, name: str, leaf):
+        """Pin a repaired leaf back to its NamedSharding — recover_block's
+        scatter output may otherwise come back differently laid out and
+        make the precompiled update programs reject the live view."""
+        eng = self.engine_of(name)
+        if eng.mesh is None:
+            return leaf
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(
+            leaf, NamedSharding(eng.mesh, eng.specs.get(name, P())))
+
+    # ------------------------------------------------------------------ API
+    def expect_injection(self, name: str, gblock: int, step: int) -> None:
+        """Register a known corruption (fault oracle / benches) so its
+        patrol detection yields a measured latency in steps."""
+        self._expected[(name, int(gblock))] = int(step)
+
+    def declare_shard_lost(self, name: str, shard: int) -> None:
+        """Queue an online rebuild of ``name``'s ``shard`` (operator
+        signal; probes also declare losses themselves past the
+        ``shard_loss_threshold``)."""
+        if name not in self.xpar:
+            raise ValueError(
+                f"{name}: no cross-shard parity (leaf must be dim0-sharded "
+                "across >= 2 shards for online rebuild)")
+        if (self.rebuild is not None and self.rebuild.name == name
+                and self.rebuild.shard == int(shard)):
+            return      # already rebuilding exactly this shard
+        if (name, int(shard)) not in self._pending_loss:
+            self._pending_loss.append((name, int(shard)))
+
+    def latency_stats(self, step_seconds: float = 1.0) -> Dict[str, float]:
+        """Measured detection-latency summary for the MTTDL model
+        (:func:`repro.core.mttdl.detection_latency_stats`)."""
+        from repro.core import mttdl
+        return mttdl.detection_latency_stats(self.latencies, step_seconds)
+
+    def coverage(self) -> Dict[str, float]:
+        """Fraction of each leaf's local block space the current sweep has
+        covered (1.0 = at least one full sweep done)."""
+        out = {}
+        for n in self.targets:
+            nb = self.store.metas[n].n_blocks
+            out[n] = 1.0 if self.sweeps[n] else min(1.0, self.cursor[n] / nb)
+        return out
+
+    # ----------------------------------------------------------------- tick
+    def on_tick(self, get_leaves, out, step: int, report,
+                busy: bool = False) -> None:
+        """One tick of background duty (called by ``ProtectedStore.tick``
+        after the foreground group loop; mutates ``out`` and ``report``)."""
+        self.ticks += 1
+        overlay: Optional[Dict[str, Any]] = None
+
+        def lv() -> Dict[str, Any]:
+            nonlocal overlay
+            if overlay is None:
+                overlay = dict(get_leaves())
+            return overlay
+
+        if not self._primed:
+            self._prime(lv(), out)
+            self._primed = True
+        # Invalidate-then-validate: write samples first, so a probe result
+        # never re-validates a cross-shard parity row over a fresh write.
+        self._process_sample()
+        self._process_probe(out, step, report)
+        if self.rebuild is None and self._pending_loss:
+            self._start_rebuild(lv(), out, step)
+        if self.rebuild is not None:
+            self.rebuild.step_once(lv(), out, report, step)
+            if self.rebuild.status.done:
+                recs = self.rebuild.unrecoverable()
+                self.unrecoverable.extend(recs)
+                report.unrecoverable = report.unrecoverable + tuple(recs)
+                self.rebuild = None
+        elif self._repair_queue:
+            self._run_repairs(lv, out, report)
+        self._dispatch_sample(out)
+        if (not busy and self._probe is None and self.rebuild is None
+                and self.targets):
+            self._dispatch_probe(lv(), out, step, report)
+
+    # ------------------------------------------------------------- internals
+    def _prime(self, leaves, out) -> None:
+        """First tick: fold the initial cross-shard parity image per
+        eligible leaf and seed row validity from the live bitvectors."""
+        for name, xp in self.xpar.items():
+            eng = self.engine_of(name)
+            stack = self.jit(("stack", name),
+                             eng.shard_lanes_fn(name))(leaves[name])
+            xp.xpar = self.jit(("xfold", name), _xor_fold)(stack)
+            xp.xvalid = ~self.fetch_live_rows(name, out[name]).any(axis=0)
+
+    def _process_sample(self) -> None:
+        if self._sample is None:
+            return
+        for name, words in self._sample.items():
+            meta = self.store.metas[name]
+            k = self.store.shard_factor(name)
+            rows = bits_to_mask(np.asarray(words), meta.n_blocks,
+                                shards=k).reshape(k, meta.n_blocks)
+            self.xpar[name].xvalid &= ~rows.any(axis=0)
+        self._sample = None
+
+    def _dispatch_sample(self, out) -> None:
+        """Per-tick write sample for cross-shard parity freshness.  Runs on
+        EVERY tick (not just probe ticks): a mark consumed by an update
+        dispatched this tick leaves ``dirty`` at adoption, and only this
+        sample still catches it in ``shadow``."""
+        if not self.xpar:
+            return
+        names = tuple(sorted(self.xpar))
+        fn = self.jit(("sample", names),
+                      lambda rs: {n: jnp.bitwise_or(rs[n].dirty,
+                                                    rs[n].shadow)
+                                  for n in names})
+        words = fn({n: out[n] for n in names})
+        for w in words.values():
+            try:
+                w.copy_to_host_async()
+            except AttributeError:
+                pass
+        self._sample = words
+
+    def _dispatch_probe(self, leaves, out, step: int, report) -> None:
+        name = self.targets[self._ti % len(self.targets)]
+        self._ti += 1
+        meta = self.store.metas[name]
+        eng = self.engine_of(name)
+        w, nb = self.window[name], meta.n_blocks
+        # Clamp so windows never cross n_blocks: the final window of a
+        # sweep re-probes a little instead (keeps every downstream
+        # dynamic_update_slice un-clamped and in-range).
+        start = min(self.cursor[name], nb - w)
+        want_slab = name in self.xpar
+        fn = self.jit(("probe", name, w, want_slab),
+                      eng.verify_window_fn(name, w, want_slab=want_slab))
+        outs = fn(leaves[name], out[name], np.int32(start))
+        mism, clean = outs[0], outs[1]
+        xwin = None
+        if want_slab:
+            xwin = self.jit(("xfold", name), _xor_fold)(outs[2])
+        for a in (mism, clean):
+            try:
+                a.copy_to_host_async()
+            except AttributeError:
+                pass
+        self._probe = (name, start, w, mism, clean, xwin, step)
+        self.blocks_scanned += w
+        self.cursor[name] = start + w
+        if self.cursor[name] >= nb:
+            self.cursor[name] = 0
+            self.sweeps[name] += 1
+        report.patrolled = report.patrolled + (name,)
+
+    def _process_probe(self, out, step: int, report) -> None:
+        if self._probe is None:
+            return
+        name, start, w, mism_d, clean_d, xwin_d, _ = self._probe
+        if not (_ready(mism_d) and _ready(clean_d)):
+            return      # still in flight; at most one probe outstanding
+        self._probe = None
+        if self.rebuild is not None and self.rebuild.name == name:
+            # Dispatched before the loss was declared: its verdicts are
+            # about pre-rebuild garbage.  Drop it wholesale (the next sweep
+            # re-covers the window).
+            return
+        meta = self.store.metas[name]
+        k = self.store.shard_factor(name)
+        m = np.asarray(mism_d).reshape(k, w)
+        c = np.asarray(clean_d).reshape(k, w)
+        report.patrol_mismatches += int(m.sum())
+        lost_shards = self._detect_loss(name, m, c)
+        for s in range(k):
+            if s in lost_shards:
+                continue
+            for j in np.flatnonzero(m[s]):
+                self._on_detection(name, s * meta.n_blocks + start + int(j),
+                                   step, report)
+        # Adopt the probe's fold into cross-shard parity for rows every
+        # shard saw clean and matching (skip entirely once a shard is
+        # wholesale-suspect: its lanes are garbage, not parity capital).
+        if name in self.xpar and xwin_d is not None and not lost_shards:
+            ok = c.all(axis=0) & ~m.any(axis=0)
+            if ok.any():
+                xp = self.xpar[name]
+                xp.xpar = self.jit(
+                    ("xadopt", name, w),
+                    _make_adopt(w, meta.lanes_per_block))(
+                        xp.xpar, xwin_d, jnp.asarray(ok), np.int32(start))
+                xp.xvalid[start:start + w] |= ok
+
+    def _detect_loss(self, name: str, m: np.ndarray,
+                     c: np.ndarray) -> set:
+        """Wholesale-corrupt shard heuristic: within one probe window, a
+        shard whose mismatches dominate its clean blocks is lost, not
+        bitflipped — queue a rebuild instead of per-block repairs."""
+        pol = self.store.policy
+        lost = set()
+        if name not in self.xpar:
+            return lost      # no rebuild substrate; treat per-block
+        for s in range(m.shape[0]):
+            mm, cc = int(m[s].sum()), int(c[s].sum())
+            if cc and mm >= max(pol.shard_loss_min_blocks,
+                                math.ceil(pol.shard_loss_threshold * cc)):
+                lost.add(s)
+                try:
+                    self.declare_shard_lost(name, s)
+                except ValueError:
+                    lost.discard(s)
+        return lost
+
+    def _on_detection(self, name: str, gblock: int, step: int,
+                      report) -> None:
+        key = (name, gblock)
+        if key in self._detected:
+            return
+        self._detected.add(key)
+        if self._attempts.get(key, 0) >= MAX_REPAIR_ATTEMPTS:
+            # Re-detected after repeated "successful" repairs: the stripe's
+            # parity was refreshed over the corrupt data (vulnerability
+            # window hit) and reconstruction keeps reproducing garbage.
+            u = vulnerable_unrecoverable(self.store.metas, [(name, gblock)])
+            self.unrecoverable.extend(u)
+            report.unrecoverable = report.unrecoverable + tuple(u)
+            return
+        inj = self._expected.pop(key, None)
+        lat = (step - inj) if inj is not None else None
+        if lat is not None:
+            self.latencies.append(int(lat))
+        self.detections.append(DetectionEvent(name, gblock, int(step), lat))
+        self._repair_queue.append([name, gblock, 0])
+
+    def _start_rebuild(self, leaves, out, step: int) -> None:
+        name, shard = self._pending_loss.pop(0)
+        # Shard-wide garbage invalidates every queued per-block judgment
+        # about this leaf; the rebuild re-establishes it wholesale and
+        # later probes re-detect anything still wrong.
+        self._repair_queue = [e for e in self._repair_queue if e[0] != name]
+        self._detected = {d for d in self._detected if d[0] != name}
+        try:
+            self.rebuild = ShardRebuilder(self, name, shard,
+                                          leaves, out, step)
+        except RuntimeError as e:     # not primed yet: retry next tick
+            warnings.warn(str(e), RuntimeWarning, stacklevel=2)
+            self._pending_loss.append((name, shard))
+
+    def _run_repairs(self, lv, out, report) -> None:
+        budget = max(1, int(self.store.policy.patrol_repair_per_tick))
+        by_leaf: Dict[str, List[int]] = {}
+        for name, gb, _ in self._repair_queue:
+            by_leaf.setdefault(name, []).append(gb)
+        singles, multi = plan_stripe_repairs(self.store.metas, by_leaf)
+        if multi:
+            # >= 2 detections sharing a parity group: XOR cannot repair.
+            bad = {(u.leaf, b) for u in multi for b in u.blocks}
+            self._repair_queue = [e for e in self._repair_queue
+                                  if (e[0], e[1]) not in bad]
+            self.unrecoverable.extend(multi)
+            report.unrecoverable = report.unrecoverable + tuple(multi)
+        take = singles[:budget]
+        if not take:
+            return
+        leaves = lv()
+        repaired, fixed, vulnerable = repair_blocks(
+            self.store, leaves, out, take)
+        for name, gb in fixed:
+            self.adopt_repair(name, self._repin(name, repaired[name]),
+                              leaves, report)
+            self._repair_queue = [e for e in self._repair_queue
+                                  if (e[0], e[1]) != (name, gb)]
+            # Success is provisional (see MAX_REPAIR_ATTEMPTS): forget the
+            # detection so the next sweep can re-flag it if reconstruction
+            # reproduced garbage.
+            self._detected.discard((name, gb))
+            self._attempts[(name, gb)] = self._attempts.get((name, gb),
+                                                            0) + 1
+        vul = set(vulnerable)
+        drop: List[UnrecoverableBlock] = []
+        for e in self._repair_queue:
+            if (e[0], e[1]) in vul:
+                e[2] += 1
+                if e[2] > MAX_REPAIR_ATTEMPTS:
+                    drop.extend(vulnerable_unrecoverable(
+                        self.store.metas, [(e[0], e[1])]))
+        if drop:
+            gone = {(u.leaf, u.blocks[0]) for u in drop}
+            self._repair_queue = [e for e in self._repair_queue
+                                  if (e[0], e[1]) not in gone]
+            self.unrecoverable.extend(drop)
+            report.unrecoverable = report.unrecoverable + tuple(drop)
+
+
+def _make_adopt(w: int, lanes: int):
+    """Window adoption into the cross-shard parity image."""
+    def adopt(xpar, xwin, ok, start):
+        cur = jax.lax.dynamic_slice(xpar, (start, jnp.int32(0)), (w, lanes))
+        new = jnp.where(ok[:, None], xwin, cur)
+        return jax.lax.dynamic_update_slice(xpar, new,
+                                            (start, jnp.int32(0)))
+    return adopt

@@ -1,0 +1,267 @@
+"""Online shard rebuild from cross-shard parity.
+
+Shard-local XOR stripes (the paper's parity) correct a single block per
+stripe — useless when a whole shard's data is lost or wholesale-corrupt
+(device dropout, firmware scribble over one host's DAX range).  For that
+failure domain the patroller maintains a second, orthogonal parity layer
+per eligible leaf: **cross-shard parity** (``xpar``), one XOR row per
+*local* block folding the same-indexed block of every shard.  Losing shard
+``s`` then rebuilds block ``b`` as ``xpar[b] XOR (XOR of the surviving
+shards' block b)`` — provided no shard wrote block ``b`` since its row was
+refreshed.
+
+Freshness is tracked host-side (``xvalid``) by the patroller's per-tick
+write sampling plus an exact ``dirty | shadow`` fetch at rebuild start and
+at every rebuild tick (writes land before the tick, so the fetch at tick
+``t`` sees every mark through step ``t`` — no rebuilt paste can clobber a
+foreground write).  Blocks classified per window:
+
+* **rebuilt** — ``xvalid`` row, pasted from the reconstruction and marked
+  dirty so the normal Algorithm-1 pipeline regenerates their shard-local
+  redundancy (no direct checksum/parity surgery racing in-flight updates);
+* **fresh** — rewritten by the foreground since the rebuild started; the
+  new data supersedes the loss and its redundancy flows through the normal
+  dirty path;
+* **unrecoverable** — stale ``xpar`` row and never rewritten (including
+  blocks already dirty at loss time: their pre-loss writes died with the
+  shard).  Reported structurally and *also* marked dirty, so redundancy
+  re-converges over the garbage (accepted, named loss) instead of alarming
+  forever.
+
+The per-tick paste window is bounded by ``rebuild_bytes_per_tick``
+(default 4x the patrol budget) — the foreground stall per tick is one
+bounded slice program plus a bitvector fetch, never a full-leaf pass.  The
+one full-leaf read happens once, at rebuild start, to freeze the
+surviving shards' XOR (so later survivor writes cannot skew the
+reconstruction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocks
+from repro.core.repairs import UnrecoverableBlock
+
+
+@dataclasses.dataclass
+class CrossShardParity:
+    """Per-leaf cross-shard parity: ``xpar[b]`` = XOR over shards of local
+    block ``b``'s lanes; ``xvalid[b]`` = no shard wrote block ``b`` since
+    the row was refreshed (host-tracked, conservatively invalidated)."""
+    name: str
+    n_blocks: int
+    xpar: Optional[jax.Array] = None         # uint32 (n_blocks, lanes)
+    xvalid: Optional[np.ndarray] = None      # bool (n_blocks,)
+
+    def __post_init__(self):
+        if self.xvalid is None:
+            self.xvalid = np.zeros((self.n_blocks,), bool)
+
+
+@dataclasses.dataclass
+class RebuildStatus:
+    """Progress of one online shard rebuild (surfaced on ``TickReport``)."""
+    leaf: str
+    shard: int
+    total_blocks: int
+    started_step: int
+    rebuilt: int = 0
+    fresh: int = 0
+    lost: int = 0
+    ticks: int = 0
+    done: bool = False
+
+
+def xor_fold(stack):
+    """XOR-fold a ``(k, ...)`` stack over dim0 (cross-shard parity).
+
+    Unrolled elementwise XOR rather than ``lax.reduce``: dim0 is the
+    sharded axis, and a custom-computation cross-device reduce is
+    unsupported on some backends — elementwise XOR of the (static, small)
+    ``k`` slices lowers everywhere.  This belongs to the tiny cross-shard
+    host programs (like ``ProtectedStore._fits_all_fn``), deliberately
+    outside the collective-free per-shard rule.
+    """
+    out = stack[0]
+    for i in range(1, stack.shape[0]):
+        out = out ^ stack[i]
+    return out
+
+
+def pack_mask_np(mask: np.ndarray, n_words: int) -> np.ndarray:
+    """Host-side pack of a bool block mask into uint32 words (bit ``i`` of
+    word ``j`` = block ``j*32+i`` — the :mod:`repro.core.bits` layout)."""
+    padded = np.zeros((n_words * 32,), bool)
+    padded[:mask.size] = mask
+    w = padded.reshape(n_words, 32).astype(np.uint64)
+    return (w << np.arange(32, dtype=np.uint64)).sum(
+        axis=1, dtype=np.uint64).astype(np.uint32)
+
+
+class ShardRebuilder:
+    """One in-progress rebuild of a lost shard, paced over ticks.
+
+    Construction blocks once: an exact freshness fetch plus the dispatch of
+    the full reconstruction image ``recon = frozen_survivor_xor ^ xpar``
+    (device-resident, one shard's size).  Each :meth:`step_once` pastes a
+    bounded window of ``recon`` into the lost shard's slice and marks it
+    dirty — everything else is the normal redundancy pipeline.
+    """
+
+    def __init__(self, patroller, name: str, shard: int,
+                 leaves, red, step: int):
+        self.pat = patroller
+        self.name = name
+        self.shard = int(shard)
+        store = patroller.store
+        eng = patroller.engine_of(name)
+        self.eng = eng
+        self.meta = meta = store.metas[name]
+        self.k = eng.shard_factor(name)
+        xp = patroller.xpar.get(name)
+        if xp is None or xp.xpar is None:
+            raise RuntimeError(
+                f"{name}: shard rebuild needs cross-shard parity "
+                "(leaf not dim0-sharded, or patroller not yet primed)")
+        assert 0 <= self.shard < self.k, (name, shard, self.k)
+        nb = meta.n_blocks
+        budget = int(store.policy.rebuild_bytes_per_tick) or (
+            4 * int(store.policy.patrol_bytes_per_tick))
+        self.wb = max(1, min(nb, budget // max(1, meta.bytes_per_block)))
+        self.rows_local = eng.global_leaf_structs[name].shape[0] // self.k
+
+        # Exact freshness fetch (blocking, once): a row any shard wrote
+        # since its refresh cannot be rebuilt from it.  Marks present now
+        # are treated as pre-loss (the write may have died with the shard)
+        # — conservative: at worst a block the foreground actually rewrote
+        # post-loss is reported lost while holding correct data.
+        live = self.pat.fetch_live_rows(name, red[name])    # (k, nb) bool
+        xp.xvalid &= ~live.any(axis=0)
+        self.eligible = xp.xvalid.copy()
+        self.written = np.zeros((nb,), bool)
+        self.done_mask = np.zeros((nb,), bool)
+        self.lost_blocks: List[int] = []                    # local ids
+        self.cur = 0
+        self.status = RebuildStatus(leaf=name, shard=self.shard,
+                                    total_blocks=nb, started_step=int(step))
+
+        # Freeze the surviving shards' XOR and finish the reconstruction
+        # image in one dispatch: recon[b] = (fold_all ^ lost_slab)[b] ^
+        # xpar[b] = the lost shard's block b as of its row's refresh.
+        stack_fn = eng.shard_lanes_fn(name)
+        lost, rows_local = self.shard, self.rows_local
+
+        def recon_of(leaf, xpar):
+            stack = stack_fn(leaf)                          # (k, nb, L)
+            sub = jax.lax.dynamic_slice_in_dim(
+                leaf, lost * rows_local, rows_local, 0)
+            return xor_fold(stack) ^ blocks.to_lanes(sub, meta) ^ xpar
+
+        self.recon = self.pat.jit(("recon", name, self.shard),
+                                  recon_of)(leaves[name], xp.xpar)
+
+    # ------------------------------------------------------------------ tick
+    def step_once(self, leaves, out, report, step: int) -> None:
+        """Paste one bounded window; updates ``out`` (dirty marks) and
+        ``report`` (repaired leaf + status) in place via the patroller."""
+        meta, nb = self.meta, self.meta.n_blocks
+        self.status.ticks += 1
+        # Per-tick exact freshness fetch: marks through this step are
+        # visible (writes precede the tick), so a block the foreground
+        # rewrote is never pasted over.
+        live = self.pat.fetch_live_rows(self.name, out[self.name])
+        self.written |= live[self.shard]
+
+        start = min(self.cur, max(0, nb - self.wb))
+        ids = np.arange(start, start + self.wb)
+        fresh_ids = ids[~self.done_mask[ids] & self.written[ids]]
+        ok = np.zeros((nb,), bool)
+        lost_now = np.zeros((nb,), bool)
+        sel = ids[~self.done_mask[ids] & ~self.written[ids]]
+        ok[sel[self.eligible[sel]]] = True
+        lost_now[sel[~self.eligible[sel]]] = True
+        self.done_mask[ids] = True
+        self.lost_blocks.extend(int(b) for b in np.flatnonzero(lost_now))
+        self.status.rebuilt += int(ok.sum())
+        self.status.fresh += int(fresh_ids.size)
+        self.status.lost += int(lost_now.sum())
+
+        leaf2 = self._write_fn()(leaves[self.name], self.recon,
+                                 jnp.asarray(ok[ids]), np.int32(start))
+        # Rebuilt *and* unrecoverable blocks go dirty: Algorithm 1 then
+        # regenerates shard-local checksums/parity through the normal
+        # pipeline (rebuilt = correct redundancy; lost = consistent
+        # redundancy over the reported garbage, so scrub stops alarming).
+        mark = ok | lost_now
+        if mark.any():
+            words = jnp.asarray(pack_mask_np(mark, meta.n_dirty_words))
+            r = out[self.name]
+            out[self.name] = dataclasses.replace(
+                r, dirty=self._mark_fn()(r.dirty, words))
+        self.pat.adopt_repair(self.name, leaf2, leaves, report)
+
+        self.cur = start + self.wb
+        if self.cur >= nb:
+            self.status.done = True
+        report.rebuild = self.status
+
+    def unrecoverable(self) -> List[UnrecoverableBlock]:
+        """Structured loss records (global ids), grouped by parity stripe."""
+        meta, per = self.meta, {}
+        for b in self.lost_blocks:
+            gb = self.shard * meta.n_blocks + b
+            per.setdefault(blocks.global_stripe_id(meta, gb), []).append(gb)
+        return [UnrecoverableBlock(self.name, s, tuple(bs), "shard_loss")
+                for s, bs in sorted(per.items())]
+
+    # ------------------------------------------------------------- programs
+    def _write_fn(self):
+        """Window paste into the lost shard's slice, pinned to the leaf's
+        sharding (a free-floating output would make the precompiled update
+        programs reject the live view)."""
+        meta, wb = self.meta, self.wb
+        lost, rows_local = self.shard, self.rows_local
+
+        def write_window(leaf, recon, ok, start):
+            sub = jax.lax.dynamic_slice_in_dim(
+                leaf, lost * rows_local, rows_local, 0)
+            lanes = blocks.to_lanes(sub, meta)
+            cur = jax.lax.dynamic_slice(
+                lanes, (start, jnp.int32(0)), (wb, meta.lanes_per_block))
+            new = jax.lax.dynamic_slice(
+                recon, (start, jnp.int32(0)), (wb, meta.lanes_per_block))
+            lanes = jax.lax.dynamic_update_slice(
+                lanes, jnp.where(ok[:, None], new, cur),
+                (start, jnp.int32(0)))
+            sub = blocks.from_lanes(lanes, meta)
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, sub, lost * rows_local, 0)
+
+        kw = {}
+        if self.eng.mesh is not None:
+            from jax.sharding import NamedSharding
+            spec = self.eng.specs.get(self.name)
+            if spec is not None:
+                kw["out_shardings"] = NamedSharding(self.eng.mesh, spec)
+        return self.pat.jit(("rebuild_write", self.name, self.shard, wb),
+                            write_window, **kw)
+
+    def _mark_fn(self):
+        """OR a packed block mask into the lost shard's dirty words."""
+        nw, lost = self.meta.n_dirty_words, self.shard
+
+        def mark(dirty, mask_words):
+            seg = jax.lax.dynamic_slice_in_dim(dirty, lost * nw, nw, 0)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dirty, seg | mask_words, lost * nw, 0)
+
+        kw = {}
+        if self.eng.mesh is not None:
+            kw["out_shardings"] = self.eng.red_shardings()[self.name].dirty
+        return self.pat.jit(("rebuild_mark", self.name, self.shard),
+                            mark, **kw)

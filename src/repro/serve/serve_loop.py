@@ -20,7 +20,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common import flatten_dict
+from repro.common import flatten_dict, unflatten_dict
 from repro.core.engine import RedundancyEngine
 from repro.core.store import ProtectedStore, as_store
 
@@ -105,6 +105,12 @@ class Server:
                     step_time=time.perf_counter() - last,
                     scrub_period=scrub_every)
                 mismatches += report.mismatches
+                if report.repaired:
+                    # The scrub patroller repaired or rebuilt cache leaves;
+                    # decode must continue on the corrected pages.
+                    flat = flatten_dict(caches)
+                    flat.update(report.repaired)
+                    caches = unflatten_dict(flat)
                 last = time.perf_counter()
         if self.store is not None:
             # Adopt any update still in flight from the overlap pipeline so

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.engine import RedundancyEngine
 from repro.core.store import ProtectedStore, as_store
 from repro.optim.adamw import AdamW
-from .state import TrainState, protected_leaves
+from .state import TrainState, protected_leaves, replace_protected
 
 
 def make_train_step(model, opt: AdamW,
@@ -198,10 +198,17 @@ class Trainer:
             self.step_times.append(dt)
             if self.store is not None:
                 st = state
-                red, _ = self.store.tick(
+                red, report = self.store.tick(
                     lambda: protected_leaves(st.params, st.opt), st.red,
                     int(st.step), step_time=dt, scrub_period=scrub_period)
                 state = dataclasses.replace(state, red=red)
+                if report.repaired:
+                    # The scrub patroller repaired or rebuilt leaves this
+                    # tick; fold them back so training continues on the
+                    # corrected state.
+                    lv = protected_leaves(state.params, state.opt)
+                    lv.update(report.repaired)
+                    state = replace_protected(state, lv)
             if on_step is not None:
                 on_step(state, metrics)
         return state

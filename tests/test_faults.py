@@ -280,6 +280,11 @@ def test_same_parity_group_double_corruption_fails_loudly(tmp_path):
     rep = mgr.last_restore_report
     assert rep.tried == [(2, "unrecoverable"), (1, "ok")]
     assert rep.step == 1 and rep.lost_blocks == 2
+    # structured loss records: which stripe, which blocks, why (PR6)
+    assert len(rep.unrecoverable) == 1
+    u = rep.unrecoverable[0]
+    assert (u.leaf, u.reason) == ("w", "multi_corrupt")
+    assert u.stripe == 1 and set(u.blocks) == {4, 5}
     np.testing.assert_array_equal(np.asarray(restored.leaves["w"]),
                                   np.asarray(leaves["w"]))
 
