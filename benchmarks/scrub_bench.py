@@ -131,7 +131,7 @@ def sharded_child(steps: int, n_rows: int, batch: int, period: int) -> None:
     lv, red = store.inject({"heap": heap}, red, FaultSpec(
         kind="shard_loss", leaf="heap", block=lost))
     heap = lv["heap"]
-    store.declare_shard_lost("heap", lost)
+    store.declare_shard_lost("heap", lost, red)
     rebuild_ticks = None
     t0 = time.perf_counter()
     i = 0

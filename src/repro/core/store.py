@@ -128,9 +128,15 @@ class RedundancyPolicy:
     # mismatching, at least ``shard_loss_min_blocks`` of them) triggers an
     # online rebuild from cross-shard parity, paced by
     # ``rebuild_bytes_per_tick`` (0 = 4x the patrol budget).  Priority:
-    # foreground writes > due redundancy ticks > rebuild > patrol.
+    # foreground writes > due redundancy ticks > rebuild > patrol — with a
+    # starvation floor: after ``patrol_max_starved_ticks`` consecutive
+    # probe-less ticks (every tick busy) one probe dispatches anyway, so
+    # wall-to-wall update traffic cannot silently stall detection forever
+    # (0 disables the floor; ``TickReport.patrol_starved_ticks`` shows the
+    # current streak).
     patrol_bytes_per_tick: int = 0
     patrol_repair_per_tick: int = 1
+    patrol_max_starved_ticks: int = 32
     rebuild_bytes_per_tick: int = 0
     shard_loss_threshold: float = 0.5
     shard_loss_min_blocks: int = 4
@@ -238,6 +244,10 @@ class TickReport:
     # active repro.scrub.RebuildStatus (None = no rebuild running).
     patrolled: Tuple[str, ...] = ()
     patrol_mismatches: int = 0
+    # Consecutive ticks the patrol has gone without dispatching a probe
+    # (busy foreground); resets on dispatch, forced past
+    # ``RedundancyPolicy.patrol_max_starved_ticks``.
+    patrol_starved_ticks: int = 0
     repaired: Dict[str, Any] = dataclasses.field(default_factory=dict)
     unrecoverable: Tuple[Any, ...] = ()
     rebuild: Optional[Any] = None
@@ -1145,20 +1155,25 @@ class ProtectedStore:
         return repair_corruption(self, leaves, red, mismatches,
                                  details=details)
 
-    def declare_shard_lost(self, name: str, shard: int) -> None:
+    def declare_shard_lost(self, name: str, shard: int,
+                           red: Optional[RedundancyState] = None) -> None:
         """Tell the patroller a shard of ``name`` is lost (operator signal).
 
         The patroller normally detects wholesale shard corruption from its
         own probes (``shard_loss_threshold``); this is the explicit path
         for known losses (a device dropped out).  Requires the patroller
         (``RedundancyPolicy.patrol_bytes_per_tick > 0``); the rebuild
-        starts on the next ``tick``.
+        starts on the next ``tick``.  Pass the current ``red`` state when
+        available: its ``dirty | shadow`` marks snapshot which blocks had
+        writes in flight at declaration (data died with the shard — they
+        report as unrecoverable), so that foreground writes landing
+        *after* the declaration still classify as fresh.
         """
         if self.patroller is None:
             raise RuntimeError(
                 "declare_shard_lost needs the scrub patroller "
                 "(set RedundancyPolicy.patrol_bytes_per_tick > 0)")
-        self.patroller.declare_shard_lost(name, shard)
+        self.patroller.declare_shard_lost(name, shard, red)
 
     def inject(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
                spec) -> Tuple[Dict[str, jax.Array], RedundancyState]:

@@ -316,7 +316,7 @@ def sharded_rebuild_case(seed, steps, mesh, specs) -> int:
     lost = 3
     leaves, red = store.inject(leaves, red, FaultSpec(
         kind="shard_loss", leaf="w", block=lost))
-    store.declare_shard_lost("w", lost)
+    store.declare_shard_lost("w", lost, red)
     status = None
     for _ in range(32):
         red, rep = store.tick(leaves, red, step, scrub_period=0)

@@ -17,8 +17,12 @@ Duty order inside one tick — strictly below the foreground:
    before we are called);
 2. online shard rebuild, one bounded window per tick (loss recovery);
 3. paced parity repairs of previously detected blocks;
-4. a patrol probe — only on quiet ticks (no update dispatched) and never
-   while a rebuild is active.
+4. a patrol probe — on quiet ticks (no update dispatched) and never
+   while a rebuild is active; after ``patrol_max_starved_ticks``
+   consecutive probe-less ticks one probe dispatches even on a busy tick
+   (the starvation floor — wall-to-wall update traffic must not silently
+   degrade detection latency to the scheduled-scrub baseline;
+   ``TickReport.patrol_starved_ticks`` surfaces the current streak).
 
 Probes are asynchronous: dispatched at tick ``t`` against the
 post-dispatch live view (in-flight blocks are shadow-marked, so the clean
@@ -33,10 +37,11 @@ row is never validated over a fresh write.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +60,11 @@ from .rebuild import CrossShardParity, ShardRebuilder, xor_fold as _xor_fold
 # the next sweep and are retried up to this many times before the stripe is
 # declared lost.
 MAX_REPAIR_ATTEMPTS = 3
+
+# Bound on the observability histories (detections, measured latencies) so
+# a long-running store does not grow them without limit; the MTTDL model
+# only ever wants recent-window statistics anyway.
+OBSERVABILITY_CAP = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +118,10 @@ class ScrubPatroller:
         self._jits: Dict[Any, Callable] = {}
         # In-flight async work: at most one probe; one write sample.
         self._probe: Optional[Tuple] = None
+        # Rows of the in-flight probe's leaf invalidated by write samples
+        # processed since its dispatch: a probe that lands late must not
+        # re-validate them (its clean mask predates those writes).
+        self._probe_inval: Optional[np.ndarray] = None
         self._sample: Optional[Dict[str, jax.Array]] = None
         self._ti = 0                       # round-robin target index
         # Detection / repair bookkeeping ((name, global_block) keyed).
@@ -115,13 +129,17 @@ class ScrubPatroller:
         self._attempts: Dict[Tuple[str, int], int] = {}
         self._expected: Dict[Tuple[str, int], int] = {}
         self._repair_queue: List[List] = []    # [name, gblock, retries]
-        self._pending_loss: List[Tuple[str, int]] = []
+        # Queued losses: (name, shard, preloss-row-mask-or-None).
+        self._pending_loss: List[Tuple[str, int, Optional[np.ndarray]]] = []
         self.rebuild: Optional[ShardRebuilder] = None
         # Observability.
         self.ticks = 0
         self.blocks_scanned = 0            # local probe positions covered
-        self.detections: List[DetectionEvent] = []
-        self.latencies: List[int] = []     # steps, registered injections only
+        self.starved_ticks = 0             # consecutive ticks with no probe
+        self.detections: collections.deque = collections.deque(
+            maxlen=OBSERVABILITY_CAP)
+        self.latencies: collections.deque = collections.deque(
+            maxlen=OBSERVABILITY_CAP)      # steps, registered injections only
         self.unrecoverable: List[UnrecoverableBlock] = []
 
     # ------------------------------------------------------------- plumbing
@@ -171,10 +189,19 @@ class ScrubPatroller:
         patrol detection yields a measured latency in steps."""
         self._expected[(name, int(gblock))] = int(step)
 
-    def declare_shard_lost(self, name: str, shard: int) -> None:
+    def declare_shard_lost(self, name: str, shard: int,
+                           red: Optional[Mapping[str, Any]] = None) -> None:
         """Queue an online rebuild of ``name``'s ``shard`` (operator
         signal; probes also declare losses themselves past the
-        ``shard_loss_threshold``)."""
+        ``shard_loss_threshold``).
+
+        Pass the current ``red`` state when it is in hand: its ``dirty |
+        shadow`` marks on the lost shard pin down *declaration-time*
+        in-flight writes (data died with the shard — reported
+        unrecoverable, never "fresh") while later foreground writes still
+        classify as fresh.  Without ``red`` the rebuild snapshots at
+        construction instead, which conservatively sweeps any write
+        between declaration and the next tick into the pre-loss set."""
         if name not in self.xpar:
             raise ValueError(
                 f"{name}: no cross-shard parity (leaf must be dim0-sharded "
@@ -182,8 +209,14 @@ class ScrubPatroller:
         if (self.rebuild is not None and self.rebuild.name == name
                 and self.rebuild.shard == int(shard)):
             return      # already rebuilding exactly this shard
-        if (name, int(shard)) not in self._pending_loss:
-            self._pending_loss.append((name, int(shard)))
+        if any(p[0] == name and p[1] == int(shard)
+               for p in self._pending_loss):
+            return      # keep the earliest (closest-to-loss) snapshot
+        preloss = None
+        if red is not None:
+            preloss = self.fetch_live_rows(
+                name, red[name])[int(shard)].copy()
+        self._pending_loss.append((name, int(shard), preloss))
 
     def latency_stats(self, step_seconds: float = 1.0) -> Dict[str, float]:
         """Measured detection-latency summary for the MTTDL model
@@ -233,9 +266,21 @@ class ScrubPatroller:
         elif self._repair_queue:
             self._run_repairs(lv, out, report)
         self._dispatch_sample(out)
-        if (not busy and self._probe is None and self.rebuild is None
-                and self.targets):
+        # Busy ticks defer the probe, but only up to the starvation floor:
+        # under wall-to-wall update traffic the patrol would otherwise
+        # never run and detection latency silently degrades to the
+        # scheduled-scrub baseline.  After ``patrol_max_starved_ticks``
+        # consecutive probe-less ticks one probe dispatches anyway
+        # (0 disables the floor; rebuilds still take priority).
+        floor = int(self.store.policy.patrol_max_starved_ticks)
+        forced = floor > 0 and self.starved_ticks >= floor
+        if ((not busy or forced) and self._probe is None
+                and self.rebuild is None and self.targets):
             self._dispatch_probe(lv(), out, step, report)
+            self.starved_ticks = 0
+        elif self._probe is None and self.targets:
+            self.starved_ticks += 1
+        report.patrol_starved_ticks = self.starved_ticks
 
     # ------------------------------------------------------------- internals
     def _prime(self, leaves, out) -> None:
@@ -256,7 +301,15 @@ class ScrubPatroller:
             k = self.store.shard_factor(name)
             rows = bits_to_mask(np.asarray(words), meta.n_blocks,
                                 shards=k).reshape(k, meta.n_blocks)
-            self.xpar[name].xvalid &= ~rows.any(axis=0)
+            written = rows.any(axis=0)
+            self.xpar[name].xvalid &= ~written
+            # Remember rows written while a probe is in flight on this
+            # leaf: the probe's clean mask predates them, so its adoption
+            # must not re-validate them (a probe landing >1 tick after
+            # dispatch would otherwise undo this sample's invalidation).
+            if (self._probe is not None and self._probe_inval is not None
+                    and self._probe[0] == name):
+                self._probe_inval |= written
         self._sample = None
 
     def _dispatch_sample(self, out) -> None:
@@ -303,6 +356,7 @@ class ScrubPatroller:
             except AttributeError:
                 pass
         self._probe = (name, start, w, mism, clean, xwin, step)
+        self._probe_inval = (np.zeros((nb,), bool) if want_slab else None)
         self.blocks_scanned += w
         self.cursor[name] = start + w
         if self.cursor[name] >= nb:
@@ -317,6 +371,7 @@ class ScrubPatroller:
         if not (_ready(mism_d) and _ready(clean_d)):
             return      # still in flight; at most one probe outstanding
         self._probe = None
+        inval, self._probe_inval = self._probe_inval, None
         if self.rebuild is not None and self.rebuild.name == name:
             # Dispatched before the loss was declared: its verdicts are
             # about pre-rebuild garbage.  Drop it wholesale (the next sweep
@@ -327,7 +382,7 @@ class ScrubPatroller:
         m = np.asarray(mism_d).reshape(k, w)
         c = np.asarray(clean_d).reshape(k, w)
         report.patrol_mismatches += int(m.sum())
-        lost_shards = self._detect_loss(name, m, c)
+        lost_shards = self._detect_loss(name, m, c, out)
         for s in range(k):
             if s in lost_shards:
                 continue
@@ -339,6 +394,10 @@ class ScrubPatroller:
         # wholesale-suspect: its lanes are garbage, not parity capital).
         if name in self.xpar and xwin_d is not None and not lost_shards:
             ok = c.all(axis=0) & ~m.any(axis=0)
+            if inval is not None:
+                # Rows written after dispatch (per the samples processed
+                # while this probe was in flight): the slab predates them.
+                ok &= ~inval[start:start + w]
             if ok.any():
                 xp = self.xpar[name]
                 xp.xpar = self.jit(
@@ -348,7 +407,7 @@ class ScrubPatroller:
                 xp.xvalid[start:start + w] |= ok
 
     def _detect_loss(self, name: str, m: np.ndarray,
-                     c: np.ndarray) -> set:
+                     c: np.ndarray, out) -> set:
         """Wholesale-corrupt shard heuristic: within one probe window, a
         shard whose mismatches dominate its clean blocks is lost, not
         bitflipped — queue a rebuild instead of per-block repairs."""
@@ -362,7 +421,7 @@ class ScrubPatroller:
                                 math.ceil(pol.shard_loss_threshold * cc)):
                 lost.add(s)
                 try:
-                    self.declare_shard_lost(name, s)
+                    self.declare_shard_lost(name, s, out)
                 except ValueError:
                     lost.discard(s)
         return lost
@@ -389,18 +448,22 @@ class ScrubPatroller:
         self._repair_queue.append([name, gblock, 0])
 
     def _start_rebuild(self, leaves, out, step: int) -> None:
-        name, shard = self._pending_loss.pop(0)
+        name, shard, preloss = self._pending_loss.pop(0)
         # Shard-wide garbage invalidates every queued per-block judgment
         # about this leaf; the rebuild re-establishes it wholesale and
-        # later probes re-detect anything still wrong.
+        # later probes re-detect anything still wrong — with a fresh
+        # attempt budget (stale counts would declare a post-rebuild
+        # re-detection unrecoverable prematurely).
         self._repair_queue = [e for e in self._repair_queue if e[0] != name]
         self._detected = {d for d in self._detected if d[0] != name}
+        self._attempts = {k: v for k, v in self._attempts.items()
+                          if k[0] != name}
         try:
             self.rebuild = ShardRebuilder(self, name, shard,
-                                          leaves, out, step)
+                                          leaves, out, step, preloss)
         except RuntimeError as e:     # not primed yet: retry next tick
             warnings.warn(str(e), RuntimeWarning, stacklevel=2)
-            self._pending_loss.append((name, shard))
+            self._pending_loss.append((name, shard, preloss))
 
     def _run_repairs(self, lv, out, report) -> None:
         budget = max(1, int(self.store.policy.patrol_repair_per_tick))

@@ -14,7 +14,14 @@ Freshness is tracked host-side (``xvalid``) by the patroller's per-tick
 write sampling plus an exact ``dirty | shadow`` fetch at rebuild start and
 at every rebuild tick (writes land before the tick, so the fetch at tick
 ``t`` sees every mark through step ``t`` — no rebuilt paste can clobber a
-foreground write).  Blocks classified per window:
+foreground write).  Marks already live on the lost shard *at loss
+declaration* are a separate class: those writes were in flight when the
+shard died, so their data died with it — the ``preloss`` snapshot
+(captured by ``declare_shard_lost`` when the caller passes ``red``, else
+conservatively at rebuild construction) keeps them out of ``written``
+until the mark is observed to clear once; only a mark that *appears*
+after the snapshot is a foreground rewrite.  Blocks classified per
+window:
 
 * **rebuilt** — ``xvalid`` row, pasted from the reconstruction and marked
   dirty so the normal Algorithm-1 pipeline regenerates their shard-local
@@ -114,7 +121,8 @@ class ShardRebuilder:
     """
 
     def __init__(self, patroller, name: str, shard: int,
-                 leaves, red, step: int):
+                 leaves, red, step: int,
+                 preloss: Optional[np.ndarray] = None):
         self.pat = patroller
         self.name = name
         self.shard = int(shard)
@@ -136,14 +144,24 @@ class ShardRebuilder:
         self.rows_local = eng.global_leaf_structs[name].shape[0] // self.k
 
         # Exact freshness fetch (blocking, once): a row any shard wrote
-        # since its refresh cannot be rebuilt from it.  Marks present now
-        # are treated as pre-loss (the write may have died with the shard)
-        # — conservative: at worst a block the foreground actually rewrote
-        # post-loss is reported lost while holding correct data.
+        # since its refresh cannot be rebuilt from it.
         live = self.pat.fetch_live_rows(name, red[name])    # (k, nb) bool
         xp.xvalid &= ~live.any(axis=0)
-        self.eligible = xp.xvalid.copy()
-        self.written = np.zeros((nb,), bool)
+        # Pre-loss in-flight writes: marks on the lost shard at loss
+        # declaration (or, without a declaration-time snapshot, every mark
+        # live now).  Their data died with the shard, so they must never
+        # count as foreground rewrites — the per-tick refetch re-sees the
+        # same marks, and without the snapshot those blocks would be
+        # misclassified "fresh" while holding scribble.  Conservative: at
+        # worst a block the foreground actually rewrote inside the
+        # snapshot window is reported lost while holding correct data.
+        self.preloss = (live[self.shard] if preloss is None
+                        else np.asarray(preloss, bool)).copy()
+        self.eligible = xp.xvalid & ~self.preloss
+        self.written = live[self.shard] & ~self.preloss
+        # A cleared mark resolves the ambiguity: the pre-loss write was
+        # consumed, so any mark that appears later is a genuine rewrite.
+        self.preloss &= live[self.shard]
         self.done_mask = np.zeros((nb,), bool)
         self.lost_blocks: List[int] = []                    # local ids
         self.cur = 0
@@ -173,9 +191,13 @@ class ShardRebuilder:
         self.status.ticks += 1
         # Per-tick exact freshness fetch: marks through this step are
         # visible (writes precede the tick), so a block the foreground
-        # rewrote is never pasted over.
+        # rewrote is never pasted over.  Only marks that appeared after
+        # the pre-loss snapshot count as rewrites (a carried-over mark is
+        # an in-flight write whose data died with the shard).
         live = self.pat.fetch_live_rows(self.name, out[self.name])
-        self.written |= live[self.shard]
+        now = live[self.shard]
+        self.written |= now & ~self.preloss
+        self.preloss &= now
 
         start = min(self.cur, max(0, nb - self.wb))
         ids = np.arange(start, start + self.wb)

@@ -141,6 +141,39 @@ def test_patrol_detects_and_repairs_mid_traffic():
     np.testing.assert_array_equal(np.asarray(leaves["w"])[16], orig[16])
 
 
+def test_patrol_starvation_floor():
+    """Wall-to-wall foreground traffic (an update dispatched every tick)
+    must not starve the patrol forever: past
+    ``patrol_max_starved_ticks`` consecutive probe-less ticks one probe
+    dispatches anyway, and the streak rides on
+    ``TickReport.patrol_starved_ticks``.  Floor 0 disables forcing (the
+    pure quiet-tick gate), which is the starvation baseline."""
+    for floor, expect_probes in ((0, False), (4, True)):
+        leaves = {"w": jax.random.normal(jax.random.PRNGKey(0),
+                                         (32, 512), jnp.float32)}
+        pol = RedundancyPolicy.single(
+            "vilamb", period_steps=1, lanes_per_block=LANES,
+            patrol_bytes_per_tick=8 * BPB, precompile=False,
+            async_tick=False, patrol_max_starved_ticks=floor)
+        store = ProtectedStore(pol).attach(leaves)
+        red = store.init(leaves)
+        pat = store.patroller
+        last = 0
+        for step in range(1, 31):      # step 0 is never update-due
+            leaves = dict(leaves, w=leaves["w"].at[:4].add(0.5))
+            ev = jnp.zeros((32,), bool).at[:4].set(True)
+            red = store.on_write(red, events={"w": ev})
+            red, rep = store.tick(leaves, red, step, scrub_period=0)
+            assert rep.updated, "tick unexpectedly quiet"
+            last = rep.patrol_starved_ticks
+        if expect_probes:
+            assert pat.blocks_scanned >= 8, pat.blocks_scanned
+            assert last <= floor, last
+        else:
+            assert pat.blocks_scanned == 0
+            assert last >= 20, last
+
+
 def test_unrecoverable_reported_structurally():
     """Two corruptions in one stripe defeat single-parity: the patroller
     reports them as a typed UnrecoverableBlock instead of looping."""
@@ -263,7 +296,8 @@ def test_sharded_shard_loss_rebuild_bitwise():
         lost, rows_local = 3, 64 // 8
         lv, red = store.inject(lv, red, FaultSpec(
             kind="shard_loss", leaf="w", block=lost))
-        store.declare_shard_lost("w", lost)
+        pat._attempts[("w", 5)] = 99       # must reset with the rebuild
+        store.declare_shard_lost("w", lost, red)
         # Foreground keeps writing — into the lost shard only (writes to
         # survivors after the xpar freeze are legitimate losses).
         w_rows = np.arange(lost * rows_local, lost * rows_local + 2)
@@ -289,6 +323,9 @@ def test_sharded_shard_loss_rebuild_bitwise():
         wb = min(nb, 4 * 32)
         assert status.ticks == math.ceil(nb / wb), (status, nb, wb)
         assert status.lost == 0, status
+        # Stale per-block repair-attempt counts for the leaf died with the
+        # rebuild (post-rebuild re-detections get a fresh budget).
+        assert all(k[0] != "w" for k in pat._attempts), pat._attempts
         assert status.rebuilt + status.fresh == nb, status
         red = store.flush(lv, red, step)
         assert store.scrub_check(lv, red) == 0
@@ -296,3 +333,128 @@ def test_sharded_shard_loss_rebuild_bitwise():
         np.testing.assert_array_equal(got, expected)
         print("REBUILD_OK", status.rebuilt, status.fresh, writes)
     """, "REBUILD_OK")
+
+
+def test_sharded_preloss_dirty_blocks_reported_lost():
+    """Blocks with writes in flight *at loss time* (dirty at declaration)
+    died with the shard: the rebuild must report them as ``shard_loss``
+    unrecoverables, never misclassify them as fresh foreground rewrites —
+    while the rest of the shard still rebuilds bitwise."""
+    run_snippet("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import ProtectedStore, RedundancyPolicy
+        from repro.faults.inject import FaultSpec
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        spec = P(("pod", "data", "model"), None)
+        pol = RedundancyPolicy.single(
+            "vilamb", period_steps=2, lanes_per_block=128, async_tick=True,
+            patrol_bytes_per_tick=32 * 128 * 4, precompile=False)
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 2048), jnp.float32)
+        lv = {"w": jax.device_put(w, NamedSharding(mesh, spec))}
+        store = ProtectedStore(pol, mesh=mesh).attach(lv, specs={"w": spec})
+        red = store.init(lv)
+        pat = store.patroller
+        step = 0
+        for _ in range(48):
+            red, _ = store.tick(lv, red, step, scrub_period=0); step += 1
+            xp = pat.xpar["w"]
+            if xp.xpar is not None and bool(xp.xvalid.all()):
+                break
+        assert bool(pat.xpar["w"].xvalid.all()), "xpar never covered leaf"
+        expected = np.array(np.asarray(lv["w"]))
+
+        lost, rows_local = 3, 64 // 8
+        nb = store.metas["w"].n_blocks          # 128 local blocks
+        bpr = nb // rows_local                  # 16 blocks per local row
+        # An in-flight write at loss time: marks land, then the shard dies
+        # before its redundancy covers the write — the data is gone.
+        w_rows = np.arange(lost * rows_local, lost * rows_local + 2)
+        idx = jnp.asarray(w_rows)
+        lv = dict(lv, w=lv["w"].at[idx].set(7.0))
+        ev = jnp.zeros((64,), bool).at[idx].set(True)
+        red = store.on_write(red, events={"w": ev})
+        lv, red = store.inject(lv, red, FaultSpec(
+            kind="shard_loss", leaf="w", block=lost))
+        store.declare_shard_lost("w", lost, red)   # marks -> preloss
+        status, unrec = None, []
+        for _ in range(24):
+            red, rep = store.tick(lv, red, step, scrub_period=0); step += 1
+            if rep.repaired:
+                lv = dict(lv, **rep.repaired)
+            unrec.extend(rep.unrecoverable)
+            if rep.rebuild is not None and rep.rebuild.done:
+                status = rep.rebuild
+                break
+        assert status is not None, "rebuild never finished"
+        n_preloss = 2 * bpr
+        assert status.lost == n_preloss, status
+        assert status.fresh == 0, status
+        assert status.rebuilt == nb - n_preloss, status
+        want = {lost * nb + b for b in range(n_preloss)}
+        got_blocks = {b for u in unrec if u.reason == "shard_loss"
+                      for b in u.blocks}
+        assert got_blocks == want, (sorted(got_blocks), sorted(want))
+        # The untouched remainder of the shard still rebuilt bitwise, and
+        # redundancy re-converged over the named loss (no eternal alarm).
+        red = store.flush(lv, red, step)
+        assert store.scrub_check(lv, red) == 0
+        got = np.asarray(lv["w"])
+        rest = np.arange(lost * rows_local + 2, (lost + 1) * rows_local)
+        np.testing.assert_array_equal(got[rest], expected[rest])
+        print("PRELOSS_OK", status.lost, status.rebuilt)
+    """, "PRELOSS_OK")
+
+
+def test_sharded_late_probe_cannot_revalidate_written_rows():
+    """A probe that stays in flight for more than one tick must not
+    re-validate cross-shard parity rows a foreground write invalidated
+    after its dispatch (its clean mask predates the write): the sample
+    invalidations processed while it flew mask its adoption."""
+    run_snippet("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import ProtectedStore, RedundancyPolicy
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        spec = P(("pod", "data", "model"), None)
+        pol = RedundancyPolicy.single(
+            "vilamb", period_steps=2, lanes_per_block=128, async_tick=True,
+            patrol_bytes_per_tick=32 * 128 * 4, precompile=False)
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 2048), jnp.float32)
+        lv = {"w": jax.device_put(w, NamedSharding(mesh, spec))}
+        store = ProtectedStore(pol, mesh=mesh).attach(lv, specs={"w": spec})
+        red = store.init(lv)
+        pat = store.patroller
+        # Tick 0: prime + dispatch the first probe (window [0, 32)).
+        red, _ = store.tick(lv, red, 0, scrub_period=0)
+        assert pat._probe is not None and pat._probe[1] == 0
+
+        class Slow:                    # pin the probe in flight
+            def __init__(self, a, gate): self.a, self.gate = a, gate
+            def is_ready(self): return self.gate[0] <= 0
+            def __array__(self, *a, **k): return np.asarray(self.a)
+        gate = [1]
+        nm, st, wdw, mi, cl, xw, sp = pat._probe
+        pat._probe = (nm, st, wdw, Slow(mi, gate), Slow(cl, gate), xw, sp)
+
+        # A write lands while the probe is in flight: global row 0 ->
+        # shard 0, local blocks [0, 16).
+        lv = dict(lv, w=lv["w"].at[0:1].add(1.0))
+        red = store.on_write(red, events={"w": jnp.zeros((64,), bool)
+                                          .at[0].set(True)})
+        # Tick 1: probe still pinned; the write sample covering the new
+        # marks is dispatched.  Tick 2: that sample is processed (rows
+        # [0, 16) invalidated), then the probe lands and adopts.
+        red, _ = store.tick(lv, red, 1, scrub_period=0)
+        gate[0] = 0
+        red, _ = store.tick(lv, red, 2, scrub_period=0)
+        xv = pat.xpar["w"].xvalid
+        assert pat._probe is None, "probe never landed"
+        assert not xv[0:16].any(), "late probe re-validated written rows"
+        assert xv[16:32].all(), "adoption lost for untouched rows"
+        print("LATE_PROBE_OK")
+    """, "LATE_PROBE_OK")
