@@ -41,6 +41,8 @@ SMOKE_KW = {
     "kernel_bench": dict(nb=128, L=512),
     "scrub_bench": dict(steps=24, n_rows=512, sweep_ticks=8,
                         sharded_steps=8, sharded_rows=128),
+    "remesh_bench": dict(steps=12, n_rows=512, read_iters=8,
+                         sharded_steps=8, sharded_rows=128),
 }
 
 
@@ -77,7 +79,8 @@ def main(argv=None) -> None:
 
     from . import (battery, dirty_cost, fio_patterns, insert_throughput,
                    kernel_bench, mttdl_bench, op_latency, overlap,
-                   overwrite_scaling, roofline, scrub_bench, ycsb)
+                   overwrite_scaling, remesh_bench, roofline, scrub_bench,
+                   ycsb)
     from .common import emit
 
     modules = [
@@ -91,6 +94,7 @@ def main(argv=None) -> None:
         ("sec4.7 battery", battery),
         ("sec4.8 mttdl", mttdl_bench),
         ("scrub patrol + rebuild", scrub_bench),
+        ("elastic remesh + degraded reads", remesh_bench),
         ("kernel fusion", kernel_bench),
         ("roofline", roofline),
     ]

@@ -57,7 +57,7 @@ echo "== [4/6] multi-device sharded tier (8 host devices, blocking tick) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} REPRO_ASYNC_TICK=0 \
     python -m pytest -x -q tests/test_sharded.py \
-    tests/test_scrub.py -k sharded
+    tests/test_scrub.py tests/test_remesh.py -k sharded
 
 echo "== [5/6] fault-injection battery (crash sweep + oracle + sharded) =="
 # Deterministic crash-point replay over every pipelined-tick phase plus
@@ -73,24 +73,28 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # blocking tick (now incl. the overlap_sharded/* mesh rows, spawned on 8
   # host devices); mttdl_bench reports MTTDL from *measured* scrub
   # detection latencies (fault injector + patroller); scrub_bench measures
-  # the patroller's foreground overhead and the online shard-rebuild stall.
-  # The JSON artifact (BENCH_PR6.json) is the machine-readable perf
+  # the patroller's foreground overhead and the online shard-rebuild stall;
+  # remesh_bench measures the elastic 4 -> 8 grow migration (throughput +
+  # bounded foreground stall) and the degraded-read latency floor.
+  # The JSON artifact (BENCH_PR7.json) is the machine-readable perf
   # trajectory — docs/perf.md.
   # --repeat 3: per-row best-of-N — the shared container's scheduler can
   # swing multi-ms rows >2x between identical runs; the minimum is stable
   # and a real regression raises it too.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
       --smoke --repeat 3 \
-      --only insert_throughput,dirty_cost,overlap,mttdl_bench,scrub_bench \
-      --json "${BENCH_JSON:-BENCH_PR6.json}"
+      --only insert_throughput,dirty_cost,overlap,mttdl_bench,scrub_bench,remesh_bench \
+      --json "${BENCH_JSON:-BENCH_PR7.json}"
   # Regression guard: compare key rows against the prior checked-in
   # artifact; >2x slowdowns fail the build (BENCH_GUARD_TOL overrides).
   # --require: the multi-device legs must actually produce their rows —
   # a spawn failure degrades to */ERROR rows, which must fail CI, not
   # silently drop coverage.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/bench_guard.py \
-      "${BENCH_JSON:-BENCH_PR6.json}" --baseline BENCH_PR5.json \
+      "${BENCH_JSON:-BENCH_PR7.json}" --baseline BENCH_PR6.json \
       --require 'overlap/endtoend_*' --require 'scrub/patrol_tick_*' \
-      --require 'scrub/rebuild_ticks' --require 'mttdl/patrol/improvement'
+      --require 'scrub/rebuild_ticks' --require 'mttdl/patrol/improvement' \
+      --require 'remesh/migrate_ticks' --require 'remesh/throughput' \
+      --require 'remesh/stall' --require 'remesh/degraded_read'
 fi
 echo "== CI OK =="

@@ -11,7 +11,8 @@ from .engine import ALL, RedundancyConfig, RedundancyEngine
 from .parity import (parity_diff, reconstruct_block, scatter_xor_stripes,
                      stripe_parity, stripe_parity_masked)
 from .repairs import (UNRECOVERABLE_REASONS, UnrecoverableBlock,
-                      plan_stripe_repairs, repair_blocks)
+                      UnrecoverableReadError, plan_stripe_repairs,
+                      repair_blocks)
 from .state import LeafRedundancy, RedundancyState, empty_leaf_red
 from .store import (LeafPolicy, ProtectedStore, RedundancyPolicy,
                     StragglerGovernor, TickReport)
@@ -22,7 +23,8 @@ __all__ = [
     "ALL", "BlockMeta", "LeafPolicy", "LeafRedundancy", "ProtectedStore",
     "RedundancyConfig", "RedundancyEngine", "RedundancyPolicy",
     "RedundancyState", "StragglerGovernor", "TickReport",
-    "UNRECOVERABLE_REASONS", "UnrecoverableBlock", "block_checksums",
+    "UNRECOVERABLE_REASONS", "UnrecoverableBlock", "UnrecoverableReadError",
+    "block_checksums",
     "checksum_diff", "compact_stripe_ids", "empty_leaf_red", "fmix32",
     "from_lanes", "full_update", "make_meta", "meta_checksum",
     "meta_checksum_delta", "parity_diff", "plan_stripe_repairs",

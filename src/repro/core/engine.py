@@ -58,6 +58,12 @@ class RedundancyConfig:
 
 
 def _local_shape(shape, spec: Optional[P], mesh: Optional[Mesh]):
+    """Per-shard local shape of a leaf under ``spec`` on ``mesh``.
+
+    Raises (AssertionError on an undivisible dim, KeyError on an unknown
+    mesh axis) rather than guessing — :func:`repro.remesh.validate_remesh`
+    relies on that to vet a target geometry *before* queueing a migration.
+    """
     if mesh is None or spec is None:
         return tuple(shape)
     out = []

@@ -32,7 +32,26 @@ from .blocks import global_stripe_id
 #   shard_loss         lost with its shard and not reconstructable from
 #                      cross-shard parity (row stale at loss time and never
 #                      rewritten by the foreground afterwards).
-UNRECOVERABLE_REASONS = ("multi_corrupt", "vulnerable_stripe", "shard_loss")
+#   read_timeout       a degraded read (``ProtectedStore.read_verified``)
+#                      exhausted its retry/backoff budget without any
+#                      recovery path (stripe parity, rebuild image)
+#                      producing verified data for the block.
+UNRECOVERABLE_REASONS = ("multi_corrupt", "vulnerable_stripe", "shard_loss",
+                         "read_timeout")
+
+
+class UnrecoverableReadError(RuntimeError):
+    """A degraded read could not produce verified data for one or more
+    requested blocks.  Carries the structured :class:`UnrecoverableBlock`
+    records — the typed, honest alternative to returning stale bytes."""
+
+    def __init__(self, leaf: str, records):
+        self.leaf = leaf
+        self.records = tuple(records)
+        blocks = sorted(b for r in self.records for b in r.blocks)
+        super().__init__(
+            f"{leaf}: degraded read failed for global blocks {blocks} "
+            f"({', '.join(sorted({r.reason for r in self.records}))})")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -140,6 +140,18 @@ class RedundancyPolicy:
     rebuild_bytes_per_tick: int = 0
     shard_loss_threshold: float = 0.5
     shard_loss_min_blocks: int = 4
+    # Elastic remesh (repro.remesh; docs/api.md): ``store.remesh(new_mesh)``
+    # re-stripes every protected leaf onto a grown/shrunk mesh over bounded
+    # per-tick migration windows of ``remesh_bytes_per_tick`` bytes per leaf
+    # (0 = 4x the patrol budget; if that is also 0 the whole leaf migrates
+    # in one window).  Priority: foreground > due ticks > rebuild > remesh
+    # > patrol.
+    remesh_bytes_per_tick: int = 0
+    # Degraded reads (``store.read_verified``): bounded retry/backoff when a
+    # block cannot be immediately verified or reconstructed — a transiently
+    # vulnerable stripe may settle within the retry budget.
+    read_retry_attempts: int = 3
+    read_retry_backoff_s: float = 0.0
 
     def leaf_policy(self, name: str) -> LeafPolicy:
         for pattern, lp in self.rules:
@@ -251,6 +263,10 @@ class TickReport:
     repaired: Dict[str, Any] = dataclasses.field(default_factory=dict)
     unrecoverable: Tuple[Any, ...] = ()
     rebuild: Optional[Any] = None
+    # Active elastic-remesh migration (repro.remesh.RemeshStatus; None = no
+    # remesh running).  On the adoption tick this is the final status with
+    # ``done=True`` and the returned red is already the new geometry.
+    remesh: Optional[Any] = None
 
 
 def _ready(x) -> bool:
@@ -328,6 +344,17 @@ class ProtectedStore:
         # Scrub patroller (repro.scrub) — built by attach() when the policy
         # enables it (patrol_bytes_per_tick > 0) and a vilamb group exists.
         self.patroller: Optional[Any] = None
+        # Elastic remesh (repro.remesh): a queued geometry-change request,
+        # the active migrator, and the mesh-geometry epoch counter (bumped
+        # at every remesh adoption; cross-shard parity images carry the
+        # epoch they were folded under).
+        self._remesh_request: Optional[Tuple[Any, Dict[str, Any]]] = None
+        self._remesh: Optional[Any] = None
+        self.geometry_version = 0
+        # Leaves pasted/moved by a settle/flush-time background drain
+        # (satellite of the rebuild lifecycle): callers adopt via
+        # ``take_repaired``.
+        self._drained: Dict[str, Any] = {}
         # Lifecycle phase hooks (repro.faults): host-level observation
         # points for crash-consistency replay.  Empty list = zero overhead
         # on every hot path (a single truthiness check).
@@ -378,6 +405,10 @@ class ProtectedStore:
         structs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                    for k, v in flat.items()}
         specs = dict(specs or {})
+        # Remembered for elastic remesh: re-striping onto a new mesh reuses
+        # the declared global structs and PartitionSpecs.
+        self._structs = structs
+        self._specs = dict(specs)
         by_policy: Dict[LeafPolicy, List[str]] = {}
         for name in structs:
             by_policy.setdefault(self.policy.leaf_policy(name), []).append(name)
@@ -822,19 +853,63 @@ class ProtectedStore:
         g.pending = None
         return out, (p.queued and not fits), p.coalesced
 
+    def _drain_background(self, leaves: Dict[str, Any], out: Dict[str, Any],
+                          step: Optional[int] = None) -> Dict[str, Any]:
+        """Run any active shard rebuild (then remesh migration) to
+        completion, synchronously — settle/flush call this before adopting
+        so a checkpoint taken mid-rebuild/mid-remesh never persists a
+        half-pasted shard or a half-migrated geometry.
+
+        Mutates ``out`` (dirty marks; wholesale red swap on a remesh
+        adoption) and returns the possibly-replaced leaves.  Pasted/moved
+        leaves are also stashed for :meth:`take_repaired` — the caller of
+        settle/flush must adopt them (the store cannot mutate caller
+        arrays)."""
+        pat = self.patroller
+        if pat is not None and pat.rebuild is not None:
+            rep = TickReport(step=int(step or 0))
+            while pat.rebuild is not None:
+                pat.rebuild.step_once(leaves, out, rep, int(step or 0))
+                if pat.rebuild.status.done:
+                    recs = pat.rebuild.unrecoverable()
+                    pat.unrecoverable.extend(recs)
+                    pat.rebuild = None
+            leaves.update(rep.repaired)
+            self._drained.update(rep.repaired)
+        if self._remesh is not None:
+            rep = TickReport(step=int(step or 0))
+            while self._remesh is not None:
+                self._remesh_step(leaves, out, rep, int(step or 0))
+            leaves.update(rep.repaired)
+            self._drained.update(rep.repaired)
+        return leaves
+
+    def take_repaired(self) -> Dict[str, Any]:
+        """Leaves replaced by a settle/flush-time background drain (rebuild
+        paste windows, remesh migration) since the last call.  Callers that
+        settle/flush mid-rebuild/mid-remesh MUST adopt these — the drained
+        paste went into these arrays, not the caller's."""
+        out, self._drained = self._drained, {}
+        return out
+
     def settle(self, red: RedundancyState,
                leaves: Optional[Mapping[str, jax.Array]] = None
                ) -> RedundancyState:
         """Adopt every in-flight async update into ``red`` (blocking).
 
         No new periodic pass is scheduled (that is ``flush``).  With
-        ``leaves`` provided, a mispredicted speculative queued update is
-        repaired immediately with the full-recompute fallback; without
-        them, its blocks simply stay marked (shadow) for the next pass —
-        conservative either way.  Ticks coalesced behind the in-flight
-        update fold into the next due tick.
+        ``leaves`` provided, any active shard rebuild / remesh migration is
+        drained first (outstanding paste windows complete — a checkpoint
+        taken now never sees a half-pasted shard; adopt the drained leaves
+        via :meth:`take_repaired`), and a mispredicted speculative queued
+        update is repaired immediately with the full-recompute fallback;
+        without them, its blocks simply stay marked (shadow) for the next
+        pass — conservative either way.  Ticks coalesced behind the
+        in-flight update fold into the next due tick.
         """
         out = dict(red)
+        if leaves is not None:
+            leaves = self._drain_background(dict(leaves), out)
         for g in self._protected():
             if g.pending is None:
                 continue
@@ -922,7 +997,13 @@ class ProtectedStore:
                 materialized = leaves()
             return materialized
 
-        for g in self._protected():
+        # During an active remesh migration the foreground group loop is
+        # skipped wholesale: the OLD red stays frozen (authoritative for a
+        # crash) while writes keep marking it via on_write, and the
+        # migrator recomputes redundancy from current data window by
+        # window — a due tick dispatched against the old geometry would
+        # race the migration for no benefit.
+        for g in (() if self._remesh is not None else self._protected()):
             lp = g.policy
             sub: Optional[Dict[str, jax.Array]] = None
 
@@ -1020,7 +1101,23 @@ class ProtectedStore:
         report.scrubbed = tuple(scrubbed)
         report.coalesced = tuple(coalesced)
         report.overflowed = tuple(overflowed)
-        if self.patroller is not None:
+        # Elastic remesh slots between rebuild and patrol in the priority
+        # ladder: a queued request starts only once no rebuild is active or
+        # pending (loss recovery first), and while a migration runs the
+        # patroller is skipped entirely (its parity geometry is tied to the
+        # old mesh; a fresh patroller is built at adoption).
+        ran_remesh = False
+        if (self._remesh is None and self._remesh_request is not None
+                and (self.patroller is None
+                     or (self.patroller.rebuild is None
+                         and not self.patroller._pending_loss))):
+            self._remesh_start(get_leaves(), out, step, report)
+        if self._remesh is not None:
+            lv = dict(get_leaves())
+            lv.update(report.repaired)      # moved leaves, if started now
+            self._remesh_step(lv, out, report, step)
+            ran_remesh = True
+        if self.patroller is not None and not ran_remesh:
             # Low-priority background duty, after every foreground decision:
             # the patroller sees the post-dispatch live view (in-flight
             # blocks are shadow-marked, so probes conservatively skip them)
@@ -1029,8 +1126,12 @@ class ProtectedStore:
             # within its byte budget.  It may repair/rebuild leaves
             # (report.repaired — callers adopt) and mark rebuilt blocks
             # dirty in ``out``.
-            self.patroller.on_tick(get_leaves, out, step, report,
-                                   busy=bool(updated))
+            # A queued (not yet started) remesh also counts as busy: the
+            # ladder puts remesh above patrol, so probes defer while a
+            # geometry change is waiting on an active rebuild to finish.
+            self.patroller.on_tick(
+                get_leaves, out, step, report,
+                busy=bool(updated) or self._remesh_request is not None)
         if self._phase_hooks:
             self._phase("tick", red=dict(out), step=step, report=report)
         return out, report
@@ -1039,11 +1140,15 @@ class ProtectedStore:
               step: Optional[int] = None) -> RedundancyState:
         """Battery/preemption flush: force Algorithm 1 on every vilamb group
         now (paper §3.3).  Sync groups are up-to-date by construction.
-        Any in-flight async update is resolved first, so the result is
+        Any active shard rebuild / remesh migration is drained first
+        (outstanding paste windows complete before anything is adopted —
+        adopt the pasted leaves via :meth:`take_repaired`), then any
+        in-flight async update is resolved, so the result is
         bitwise-identical to the blocking path's flush.  Pass ``step`` when
         known so the steps-based freshness deadline does not fire a
         spurious pass right after the flush."""
         out = dict(red)
+        leaves = self._drain_background(dict(leaves), out, step=step)
         now = time.monotonic()
         for g in self._protected():
             if g.policy.mode == "vilamb":
@@ -1063,6 +1168,79 @@ class ProtectedStore:
         if self._phase_hooks:
             self._phase("flush", red=dict(out), step=step)
         return out
+
+    # --------------------------------------------------------- elastic remesh
+    def remesh(self, new_mesh: Any,
+               specs: Optional[Mapping[str, Any]] = None) -> None:
+        """Queue an elastic geometry change: grow/shrink the device mesh by
+        incrementally re-striping every protected leaf (repro.remesh).
+
+        No stop-the-world re-attach: the migration runs over bounded
+        per-tick windows (``RedundancyPolicy.remesh_bytes_per_tick``)
+        starting on the next ``tick`` once no shard rebuild is active or
+        pending, surfacing a ``RemeshStatus`` through ``TickReport.remesh``
+        with a pinned tick bound of ``ceil(n_blocks / window)`` per leaf.
+        ``specs`` optionally overrides per-leaf PartitionSpecs for the new
+        mesh (default: the specs declared at ``attach`` — valid whenever
+        the new mesh keeps the same axis names).
+
+        Raises :class:`repro.remesh.RemeshInProgressError` when a remesh is
+        already queued or running, and
+        :class:`repro.remesh.RemeshGeometryError` when a leaf cannot be
+        evenly re-striped onto the new mesh (dim not divisible by the new
+        shard factor) or a group mode does not support migration.
+        """
+        from repro.remesh import RemeshInProgressError, validate_remesh
+        if self._remesh is not None or self._remesh_request is not None:
+            raise RemeshInProgressError(
+                "a remesh is already queued or in progress")
+        new_specs = dict(self._specs) if hasattr(self, "_specs") else {}
+        new_specs.update(specs or {})
+        validate_remesh(self, new_mesh, new_specs)
+        self._remesh_request = (new_mesh, new_specs)
+
+    @property
+    def remeshing(self) -> bool:
+        """True while a remesh is queued or actively migrating."""
+        return self._remesh is not None or self._remesh_request is not None
+
+    def _remesh_start(self, leaves: Mapping[str, jax.Array], out, step: int,
+                      report) -> None:
+        """Begin the queued migration: settle in-flight overlapped updates
+        against the OLD geometry (their outputs are old-sharded), then
+        build the migrator — one ``device_put`` of every leaf onto the new
+        mesh (value-identical; surfaced via ``report.repaired`` so the
+        caller adopts the moved arrays) plus zero-initialised new-geometry
+        redundancy the per-tick windows fill in."""
+        from repro.remesh import RemeshMigrator
+        new_mesh, new_specs = self._remesh_request
+        self._remesh_request = None
+        for g in self._protected():
+            if g.pending is None:
+                continue
+            red_sub, ovf, _ = self._resolve(
+                g, {n: out[n] for n in g.names}, wait=True)
+            out.update(red_sub)
+            if ovf:
+                repaired, fits = self._update_fn(g.label, "async_full")(
+                    {n: leaves[n] for n in g.names},
+                    {n: out[n] for n in g.names})
+                g.predicted_fits = _fits_host(fits)
+                out.update(repaired)
+        self._remesh = RemeshMigrator(self, new_mesh, new_specs,
+                                      leaves, out, step)
+        report.repaired.update(self._remesh.moved)
+        report.remesh = self._remesh.status
+
+    def _remesh_step(self, leaves, out, report, step: int) -> None:
+        """One bounded migration window; adopts the new geometry (red swap,
+        group/engine swap, fresh patroller, ``geometry_version`` bump) on
+        the tick the last window completes."""
+        m = self._remesh
+        m.step_once(leaves, out, report, step)
+        if m.status.done:
+            m.adopt(out, report)
+            self._remesh = None
 
     def redundancy_step(self, leaves: Mapping[str, jax.Array],
                         red: RedundancyState) -> RedundancyState:
@@ -1143,6 +1321,115 @@ class ProtectedStore:
             raise KeyError(f"{name} is not parity-protected")
         return engine.recover_block(leaf, r, name, block_id)
 
+    def read_verified(self, leaves: Mapping[str, jax.Array],
+                      red: RedundancyState, name: str,
+                      block_ids: Sequence[int]) -> Dict[str, Any]:
+        """Degraded-mode verified read: per requested **global** block,
+        return data that is provably current — never stale or in-flight
+        garbage — even while a shard is lost or a remesh is migrating.
+
+        Per block, in order: (1) a block inside the vulnerability window
+        (``dirty | shadow``) returns the current data — writes land in the
+        data array before redundancy, so the array itself is the newest
+        truth (unless the block's write was in flight when its shard died,
+        a named pre-loss casualty); (2) a clean block whose checksum
+        verifies returns the current data; (3) a mismatching block is
+        reconstructed — from the active rebuild's cross-shard-parity image
+        when its shard is the lost one, else from its XOR stripe via
+        ``recover_block`` — and the reconstruction is admitted only if it
+        verifies against the stored checksum.  Unverifiable blocks retry
+        with backoff (``read_retry_attempts`` / ``read_retry_backoff_s`` —
+        a transiently vulnerable stripe may settle); when the budget is
+        exhausted a typed :class:`repro.core.UnrecoverableReadError` is
+        raised carrying ``UnrecoverableBlock`` records (reason
+        ``read_timeout``).
+
+        Returns ``{global_block_id: uint32 lane row (lanes_per_block,)}``.
+        A host-side cold path (one blocking fetch per attempt): correctness
+        over throughput, by design.
+        """
+        from . import blocks as blocks_mod
+        from . import checksum as checksum_mod
+        from .repairs import UnrecoverableBlock, UnrecoverableReadError
+        from repro.faults.inject import bits_to_mask
+
+        eng = self.engine_for(name)
+        if eng is None:
+            raise KeyError(f"{name} is not parity-protected")
+        meta = self.metas[name]
+        k = self.shard_factor(name)
+        rows_local = (eng.global_leaf_structs[name].shape[0] // k
+                      if eng.mesh is not None else meta.shape[0])
+        want = [int(b) for b in block_ids]
+        for b in want:
+            if not 0 <= b < k * meta.n_blocks:
+                raise IndexError(f"{name}: global block {b} out of range "
+                                 f"(0..{k * meta.n_blocks - 1})")
+        attempts = max(1, int(self.policy.read_retry_attempts))
+        backoff = float(self.policy.read_retry_backoff_s)
+        results: Dict[int, np.ndarray] = {}
+
+        def shard_lanes(arr: np.ndarray, s: int) -> np.ndarray:
+            sub = arr[s * rows_local:(s + 1) * rows_local] if k > 1 else arr
+            return np.asarray(blocks_mod.to_lanes(jnp.asarray(sub), meta))
+
+        def ck_of(lane_row: np.ndarray, lb: int) -> int:
+            return int(np.asarray(checksum_mod.block_checksums(
+                jnp.asarray(lane_row[None, :]), block_offset=lb))[0])
+
+        for attempt in range(attempts):
+            pending = [b for b in want if b not in results]
+            if not pending:
+                break
+            if attempt and backoff > 0:
+                time.sleep(backoff * attempt)
+            arr = np.asarray(leaves[name])
+            r = red[name]
+            live = bits_to_mask(
+                np.asarray(r.dirty) | np.asarray(r.shadow), meta.n_blocks,
+                shards=k).reshape(k, meta.n_blocks)
+            cks = np.asarray(r.checksums).reshape(k, meta.n_blocks)
+            reb = self.patroller.rebuild if self.patroller else None
+            if reb is not None and reb.name != name:
+                reb = None
+            lanes_cache: Dict[int, np.ndarray] = {}
+            for b in pending:
+                s, lb = divmod(b, meta.n_blocks)
+                on_lost = reb is not None and reb.shard == s
+                if s not in lanes_cache:
+                    lanes_cache[s] = shard_lanes(arr, s)
+                row = lanes_cache[s][lb]
+                if live[s, lb]:
+                    # In the vulnerability window: the data array holds the
+                    # newest write — UNLESS that write was in flight when
+                    # the shard died (pre-loss mark): its data died with
+                    # the shard and the live bytes are scribble.
+                    if not (on_lost and bool(reb.preloss[lb])):
+                        results[b] = row.copy()
+                    continue
+                if ck_of(row, lb) == int(cks[s, lb]):
+                    results[b] = row.copy()
+                    continue
+                # Mismatch: reconstruct, admit only verified bytes.
+                if (on_lost and bool(reb.eligible[lb])
+                        and not bool(reb.written[lb])):
+                    cand = np.asarray(reb.recon)[lb]
+                    if ck_of(cand, lb) == int(cks[s, lb]):
+                        results[b] = cand.copy()
+                        continue
+                leaf2, ok = eng.recover_block(leaves[name], r, name, b)
+                if bool(ok):
+                    cand = shard_lanes(np.asarray(leaf2), s)[lb]
+                    if ck_of(cand, lb) == int(cks[s, lb]):
+                        results[b] = cand.copy()
+        missing = [b for b in want if b not in results]
+        if missing:
+            recs = tuple(UnrecoverableBlock(
+                name, blocks_mod.global_stripe_id(meta, b), (b,),
+                "read_timeout") for b in missing)
+            raise UnrecoverableReadError(name, recs)
+        return {b: results[b] for b in want}
+
     def repair(self, leaves: Mapping[str, jax.Array], red: RedundancyState,
                mismatches: Mapping[str, jax.Array],
                details: Optional[List[Any]] = None) -> Tuple[Dict, int, int]:
@@ -1173,6 +1460,14 @@ class ProtectedStore:
             raise RuntimeError(
                 "declare_shard_lost needs the scrub patroller "
                 "(set RedundancyPolicy.patrol_bytes_per_tick > 0)")
+        if self.remeshing:
+            # The patroller (and its cross-shard parity) is rebuilt fresh
+            # at remesh adoption — a loss queued now would silently vanish
+            # with the old patroller.  Fail loudly instead.
+            raise RuntimeError(
+                f"{name}: cannot declare a shard lost while a remesh is "
+                "queued or migrating; re-declare after TickReport.remesh "
+                "reports done")
         self.patroller.declare_shard_lost(name, shard, red)
 
     def inject(self, leaves: Mapping[str, jax.Array], red: RedundancyState,

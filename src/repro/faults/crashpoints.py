@@ -46,10 +46,14 @@ from .oracle import vulnerability_window
 # PR3 pipeline stages).  "adopt" = lazy adoption on a later tick;
 # "adopt_forced" = deadline- or scrub-forced blocking resolve;
 # "coalesce" = a due tick folded into the still-in-flight update
-# (mid-flight); "dispatch" = the speculative overlapped launch.
+# (mid-flight); "dispatch" = the speculative overlapped launch;
+# "rebuild_paste" = one shard-rebuild paste window landed (PR6);
+# "remesh_migrate" = one remesh migration window re-striped (PR7) — the
+# live red at both is the *old-geometry* authoritative copy, so a crash
+# there restarts on the pre-remesh mesh.
 CRASH_PHASES = ("init", "on_write", "dispatch", "coalesce", "adopt",
                 "adopt_forced", "blocking_update", "scrub", "tick", "flush",
-                "settle")
+                "settle", "rebuild_paste", "remesh_migrate")
 
 
 @jax.tree_util.register_dataclass
@@ -124,6 +128,15 @@ class CrashPointMachine:
     the tick, and steps listed in ``hold_inflight_steps`` pretend the
     in-flight update is not ready yet (deterministically exercising the
     coalesce/mid-flight interleavings on a fast device).
+
+    ``actions`` maps workload step -> ``fn(store, leaves, red)`` fired
+    after that step's writes but before its tick — the deterministic way
+    to script background-work triggers (``declare_shard_lost``,
+    ``remesh``) into the replayed run.  An action may return nothing, or
+    ``(leaves, red)`` to substitute state (e.g. after injecting a fault).
+    Leaves repaired/moved by background work (rebuild pastes, remesh
+    migration) are adopted into the driven pytree after every tick, so
+    replays observe exactly what a real serving loop would.
     """
 
     def __init__(self, make_store: Callable[[], Any],
@@ -132,7 +145,8 @@ class CrashPointMachine:
                  scrub_every: int = 0,
                  hold_inflight_steps: Sequence[int] = (),
                  mutate: Callable = default_mutate,
-                 flush_at_end: bool = True):
+                 flush_at_end: bool = True,
+                 actions: Optional[Mapping[int, Callable]] = None):
         self.make_store = make_store
         self.make_leaves = make_leaves
         self.ckpt_dir = str(ckpt_dir)
@@ -142,6 +156,7 @@ class CrashPointMachine:
         self.hold_inflight_steps = set(int(s) for s in hold_inflight_steps)
         self.mutate = mutate
         self.flush_at_end = flush_at_end
+        self.actions = {int(k): v for k, v in (actions or {}).items()}
         self._probe_store = None
 
     def _probe(self):
@@ -198,6 +213,12 @@ class CrashPointMachine:
                 leaves, events = self.mutate(rng, step, leaves)
                 cur["leaves"] = leaves
                 red = store.on_write(red, events=events)
+                act = self.actions.get(step)
+                if act is not None:
+                    res = act(store, leaves, red)
+                    if res is not None:
+                        leaves, red = dict(res[0]), dict(res[1])
+                        cur["leaves"] = leaves
                 held = step in self.hold_inflight_steps
                 if not held:
                     # Determinism: a non-held tick must always see the
@@ -209,11 +230,22 @@ class CrashPointMachine:
                         if getattr(g, "pending", None) is not None:
                             jax.block_until_ready(g.pending.fits)
                 with self._held_readiness(held):
-                    red, _ = store.tick(
+                    red, rep = store.tick(
                         leaves, red, step,
                         scrub_period=self.scrub_every or None)
+                if rep.repaired:
+                    # Rebuild pastes / remesh moves: the serving loop
+                    # adopts these, so the crash machine must too.
+                    leaves = dict(leaves)
+                    leaves.update(rep.repaired)
+                    cur["leaves"] = leaves
             if self.flush_at_end:
                 red = store.flush(leaves, red, step=self.steps)
+                drained = getattr(store, "take_repaired", lambda: {})()
+                if drained:
+                    leaves = dict(leaves)
+                    leaves.update(drained)
+                    cur["leaves"] = leaves
         finally:
             store.remove_phase_hook(hook)
         return store, leaves, red, fired
@@ -331,13 +363,21 @@ class CrashPointMachine:
 
     # -------------------------------------------------------------- sweeps
     def sweep(self, faults_for: Optional[Callable[[CrashPlan], Sequence[FaultSpec]]] = None,
-              require_phases: Sequence[str] = ()) -> List[CrashOutcome]:
+              require_phases: Sequence[str] = (),
+              only_phases: Sequence[str] = ()) -> List[CrashOutcome]:
         """Crash at every enumerated phase occurrence; every outcome must be
         recoverable or provably lost within the window.
 
         ``require_phases`` asserts the workload actually exercised the
         named phases (e.g. the PR3 pipeline set) before sweeping —
         otherwise a too-tame workload would vacuously pass.
+
+        ``only_phases`` restricts the replayed crashes to the named
+        phases (still enumerated from the full run).  Use it for remesh
+        workloads: a crash *after* adoption persists new-geometry state
+        that a fresh old-mesh store cannot restore, so those sweeps crash
+        only inside the migration (``remesh_migrate``), where the
+        old-geometry redundancy is still authoritative.
         """
         fired = self.enumerate_phases()
         have = {p for p, _ in fired}
@@ -346,8 +386,11 @@ class CrashPointMachine:
             raise AssertionError(
                 f"workload never reached phases {sorted(missing)}; "
                 f"fired={sorted(have)}")
+        keep = set(only_phases)
         outcomes = []
         for phase, occ in fired:
+            if keep and phase not in keep:
+                continue
             plan = CrashPlan(phase, occ)
             faults = tuple(faults_for(plan)) if faults_for else ()
             outcomes.append(self.run_crash(plan, faults))

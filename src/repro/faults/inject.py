@@ -22,6 +22,15 @@ Kinds
 ``stale_redundancy``   firmware lost a dirty bit: the block's data changed
                        but dirty|shadow say it did not — redundancy is
                        silently stale, indistinguishable from corruption.
+``mesh_shrink``        a departing shard (``block`` = shard index) leaves the
+                       cluster dirty: its data lanes, its slice of the
+                       global checksum array, and its meta checksum are all
+                       XOR-scribbled — the worst case a shrink-side remesh
+                       must re-stripe through.
+``mesh_grow``          a joining shard arrives with data intact but zeroed
+                       redundancy (checksums slice + meta checksum) — the
+                       fresh-capacity case a grow-side remesh covers via
+                       full recomputation of the new geometry.
 
 All randomness flows from the single ``numpy`` generator seeded at
 construction; an injector with the same seed over the same store geometry
@@ -50,7 +59,7 @@ from repro.core.state import LeafRedundancy
 
 FAULT_KINDS = ("data_bitflip", "checksum_bitflip", "parity_bitflip",
                "meta_bitflip", "torn_write", "stale_redundancy",
-               "shard_loss")
+               "shard_loss", "mesh_shrink", "mesh_grow")
 
 # Adversarial uint32 payloads: float32 NaN/Inf bit patterns and sentinel-ish
 # values.  Injection draws from these (as well as uniform bits) so detection
@@ -180,6 +189,35 @@ def apply_fault(metas, leaves: Mapping[str, jax.Array],
         lanes = B.to_lanes(sub, meta)
         lanes = lanes ^ jnp.uint32(spec.payload or 0xA5A5A5A5)
         leaves[spec.leaf] = put(B.from_lanes(lanes, meta))
+    elif spec.kind in ("mesh_shrink", "mesh_grow"):
+        # Remesh failure domains (``spec.block`` = shard index).
+        #   mesh_shrink: a departing shard's whole slice — data lanes AND
+        #     its redundancy (checksums rows + meta checksum) — is
+        #     XOR-scribbled; the shrink must re-stripe without it.
+        #   mesh_grow: a joining shard has valid data but *zeroed*
+        #     redundancy; the grow-side migration recomputes it wholesale.
+        s = int(spec.block)
+        if not 0 <= s < k:
+            raise ValueError(
+                f"{spec.leaf}: {spec.kind} addresses shard {s} but the leaf "
+                f"has {k} shard(s)")
+        r = red[spec.leaf]
+        lo, hi = s * meta.n_blocks, (s + 1) * meta.n_blocks
+        word = jnp.uint32(spec.payload or 0xA5A5A5A5)
+        if spec.kind == "mesh_shrink":
+            sub, put = B.shard_slice(leaves[spec.leaf], meta, k, s)
+            lanes = B.to_lanes(sub, meta) ^ word
+            leaves[spec.leaf] = put(B.from_lanes(lanes, meta))
+            cks = r.checksums.at[lo:hi].set(r.checksums[lo:hi] ^ word)
+            mval = (r.meta_ck[s] if r.meta_ck.ndim else r.meta_ck) ^ word
+        else:           # mesh_grow: redundancy-less arrival, data intact
+            cks = r.checksums.at[lo:hi].set(jnp.uint32(0))
+            mval = jnp.uint32(0)
+        if r.meta_ck.ndim:
+            mck = r.meta_ck.at[s].set(mval)
+        else:
+            mck = mval
+        red[spec.leaf] = dataclasses.replace(r, checksums=cks, meta_ck=mck)
     elif spec.kind in ("torn_write", "stale_redundancy"):
         # Data changes land, the dirty marks do not: red is left untouched.
         seed = np.uint32(spec.payload or 0xD15EA5E)

@@ -1,0 +1,14 @@
+"""Elastic remesh: online shard grow/shrink via incremental re-striping.
+
+``ProtectedStore.remesh(new_mesh)`` migrates every protected leaf onto a
+grown or shrunk device mesh over bounded per-tick windows — no
+stop-the-world re-attach; see :mod:`repro.remesh.migrate` and docs/api.md.
+"""
+from .migrate import (RemeshError, RemeshGeometryError,
+                      RemeshInProgressError, RemeshMigrator, RemeshStatus,
+                      translate_marks, validate_remesh)
+
+__all__ = [
+    "RemeshError", "RemeshGeometryError", "RemeshInProgressError",
+    "RemeshMigrator", "RemeshStatus", "translate_marks", "validate_remesh",
+]

@@ -67,6 +67,24 @@ MAX_REPAIR_ATTEMPTS = 3
 OBSERVABILITY_CAP = 4096
 
 
+class ShardLossConflictError(RuntimeError):
+    """A second shard of the same leaf was declared lost while a rebuild of
+    the first is active or pending.  Cross-shard parity is a single XOR
+    fold: it can reconstruct exactly one missing shard, so the second loss
+    is genuinely unrecoverable from ``xpar`` — raising keeps the in-flight
+    rebuild's paste state intact instead of silently resetting it."""
+
+    def __init__(self, leaf: str, active_shard: int, new_shard: int):
+        self.leaf = leaf
+        self.active_shard = int(active_shard)
+        self.new_shard = int(new_shard)
+        super().__init__(
+            f"{leaf}: shard {new_shard} declared lost while shard "
+            f"{active_shard} is still rebuilding; cross-shard parity "
+            "covers a single lost shard, so a concurrent second loss is "
+            "unrecoverable (wait for the active rebuild to finish)")
+
+
 @dataclasses.dataclass(frozen=True)
 class DetectionEvent:
     """One patrol detection: leaf, global block id, detection step, and —
@@ -87,6 +105,11 @@ class ScrubPatroller:
         self.store = store
         pol = store.policy
         self.patrol_bytes = int(pol.patrol_bytes_per_tick)
+        # Mesh-geometry epoch: a remesh adoption rebuilds the patroller
+        # fresh and bumps the store's version, so every parity image and
+        # rebuilder carries the geometry it was folded under — stale xpar
+        # from a previous mesh can never seed a rebuild on the new one.
+        self.geometry_version = int(getattr(store, "geometry_version", 0))
         # Patrol targets: every vilamb-protected leaf, round-robin.  The
         # probe window is static per leaf (one compile serves the sweep).
         self.targets: List[str] = []
@@ -113,7 +136,9 @@ class ScrubPatroller:
                 if (k >= 2 and gshape and gshape[0] % k == 0
                         and tuple(meta.shape) ==
                         (gshape[0] // k,) + tuple(gshape[1:])):
-                    self.xpar[name] = CrossShardParity(name, meta.n_blocks)
+                    self.xpar[name] = CrossShardParity(
+                        name, meta.n_blocks,
+                        version=self.geometry_version)
         self._primed = False
         self._jits: Dict[Any, Callable] = {}
         # In-flight async work: at most one probe; one write sample.
@@ -206,12 +231,18 @@ class ScrubPatroller:
             raise ValueError(
                 f"{name}: no cross-shard parity (leaf must be dim0-sharded "
                 "across >= 2 shards for online rebuild)")
-        if (self.rebuild is not None and self.rebuild.name == name
-                and self.rebuild.shard == int(shard)):
-            return      # already rebuilding exactly this shard
-        if any(p[0] == name and p[1] == int(shard)
-               for p in self._pending_loss):
-            return      # keep the earliest (closest-to-loss) snapshot
+        if self.rebuild is not None and self.rebuild.name == name:
+            if self.rebuild.shard == int(shard):
+                return      # idempotent: already rebuilding this shard
+            raise ShardLossConflictError(name, self.rebuild.shard, shard)
+        for p in self._pending_loss:
+            if p[0] != name:
+                continue
+            if p[1] == int(shard):
+                return      # keep the earliest (closest-to-loss) snapshot
+            # A different shard of the same leaf is already queued: the
+            # single-XOR parity cannot cover both.
+            raise ShardLossConflictError(name, p[1], shard)
         preloss = None
         if red is not None:
             preloss = self.fetch_live_rows(
@@ -422,7 +453,10 @@ class ScrubPatroller:
                 lost.add(s)
                 try:
                     self.declare_shard_lost(name, s, out)
-                except ValueError:
+                except (ValueError, ShardLossConflictError):
+                    # No parity substrate, or a second shard of a leaf
+                    # already mid-rebuild: fall back to per-block handling
+                    # (the probe's detections stand on their own).
                     lost.discard(s)
         return lost
 

@@ -64,6 +64,10 @@ class CrossShardParity:
     n_blocks: int
     xpar: Optional[jax.Array] = None         # uint32 (n_blocks, lanes)
     xvalid: Optional[np.ndarray] = None      # bool (n_blocks,)
+    # Mesh-geometry epoch this image was folded under; a remesh bumps the
+    # store's version and discards images from the old geometry (a row
+    # folded across k shards is meaningless once k changes).
+    version: int = 0
 
     def __post_init__(self):
         if self.xvalid is None:
@@ -136,6 +140,11 @@ class ShardRebuilder:
             raise RuntimeError(
                 f"{name}: shard rebuild needs cross-shard parity "
                 "(leaf not dim0-sharded, or patroller not yet primed)")
+        if xp.version != patroller.geometry_version:
+            raise RuntimeError(
+                f"{name}: cross-shard parity is from mesh geometry epoch "
+                f"{xp.version}, patroller is at {patroller.geometry_version}"
+                " — stale parity cannot seed a rebuild after a remesh")
         assert 0 <= self.shard < self.k, (name, shard, self.k)
         nb = meta.n_blocks
         budget = int(store.policy.rebuild_bytes_per_tick) or (
@@ -231,6 +240,9 @@ class ShardRebuilder:
         if self.cur >= nb:
             self.status.done = True
         report.rebuild = self.status
+        self.pat.store._phase("rebuild_paste", red=dict(out), step=step,
+                              leaf=self.name, shard=self.shard,
+                              window=(int(start), int(start + self.wb)))
 
     def unrecoverable(self) -> List[UnrecoverableBlock]:
         """Structured loss records (global ids), grouped by parity stripe."""

@@ -79,6 +79,18 @@ class Server:
             return {}
         return self.store.init(flatten_dict(caches))
 
+    def read_verified(self, caches, red, name: str, blocks):
+        """Degraded-mode read of cache blocks (flat-key ``name``).
+
+        Delegates to :meth:`ProtectedStore.read_verified`: returns verified
+        lane data per global block — reconstructing from parity or the
+        active shard rebuild instead of serving stale or in-flight bytes —
+        or raises :class:`repro.core.UnrecoverableReadError`."""
+        if self.store is None:
+            raise ValueError("Server has no ProtectedStore; "
+                             "read_verified needs protected caches")
+        return self.store.read_verified(flatten_dict(caches), red, name, blocks)
+
     def generate(self, params, batch, n_tokens: int,
                  scrub_every: Optional[int] = None
                  ) -> Tuple[jax.Array, Dict[str, Any]]:
@@ -94,6 +106,7 @@ class Server:
         token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         out = [token]
         mismatches = 0
+        remesh_status = None
         last = time.perf_counter()
         for t in range(n_tokens - 1):
             logits, caches, red, token = self.decode(params, caches, red, token, pos + t)
@@ -105,16 +118,27 @@ class Server:
                     step_time=time.perf_counter() - last,
                     scrub_period=scrub_every)
                 mismatches += report.mismatches
+                if report.remesh is not None:
+                    remesh_status = report.remesh
                 if report.repaired:
-                    # The scrub patroller repaired or rebuilt cache leaves;
-                    # decode must continue on the corrected pages.
+                    # The scrub patroller repaired or rebuilt cache leaves
+                    # (or a remesh migrated them onto the new mesh); decode
+                    # must continue on the corrected/moved pages.
                     flat = flatten_dict(caches)
                     flat.update(report.repaired)
                     caches = unflatten_dict(flat)
                 last = time.perf_counter()
         if self.store is not None:
             # Adopt any update still in flight from the overlap pipeline so
-            # the returned redundancy state is settled for the caller.
+            # the returned redundancy state is settled for the caller.  The
+            # settle also drains active rebuild/remesh windows; adopt any
+            # leaves they repaired or moved.
             red = self.store.settle(red, flatten_dict(caches))
+            moved = self.store.take_repaired()
+            if moved:
+                flat = flatten_dict(caches)
+                flat.update(moved)
+                caches = unflatten_dict(flat)
         return jnp.stack(out, axis=1), {"mismatches": mismatches, "red": red,
-                                        "caches": caches, "pos": pos + n_tokens - 1}
+                                        "caches": caches, "pos": pos + n_tokens - 1,
+                                        "remesh": remesh_status}
