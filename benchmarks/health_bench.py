@@ -1,0 +1,171 @@
+"""Health-governor benchmarks: steady-state overhead + breaker recovery.
+
+Two questions the PR-8 acceptance gate asks:
+
+* ``health/governor_overhead`` — what does the governor cost on a
+  *healthy* store?  The ladder's rungs never fire there, so the whole
+  price is the per-tick bookkeeping (begin_tick / check_pending probe /
+  end_tick age accounting).  Acceptance target: <= 5% added tick stall.
+* ``chaos/recovery_ticks`` — when a storm does trip the breaker, how
+  many calm ticks until the group is HEALTHY again?  Measured here with
+  a deterministic machine-local wedged-dispatch storm (the in-flight
+  probe is forced to report "not ready" so rung 1 times out, retries
+  exhaust, and the breaker lands in CRITICAL with sync escalation);
+  recovery is then pure hysteresis and must match 2 x recovery_ticks.
+
+Wall rows (``health/tick_*``) are absolute CPU numbers; the derived
+percentage is the signal.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import LANES_PER_BLOCK, ROW_ELEMS, STRIPE, emit, key_stream
+from repro.core import ProtectedStore, RedundancyPolicy
+
+
+def _mk(n_rows: int, health=None):
+    """Region-alike built directly: Region doesn't forward the health knob."""
+    heap = jnp.zeros((n_rows, ROW_ELEMS), jnp.float32)
+    policy = RedundancyPolicy.single(
+        "vilamb", period_steps=4, lanes_per_block=LANES_PER_BLOCK,
+        stripe_data_blocks=STRIPE, async_tick=True, health=health)
+    store = ProtectedStore(policy).attach({"heap": heap})
+    red = store.init({"heap": heap})
+
+    def write(heap, red, rows, vals):
+        heap = heap.at[rows].set(vals)
+        mask = jnp.zeros((n_rows,), bool).at[rows].set(True)
+        return heap, store.on_write(red, events={"heap": mask})
+
+    return store, heap, red, jax.jit(write, donate_argnums=(0, 1))
+
+
+def _tick_us(store, heap, red, write, keys, vals, steps: int,
+             quiescent: bool, reps: int = 3):
+    """Best-of-``reps`` mean per-tick wall micro-seconds, warmed.
+
+    The per-pass minimum is the stable statistic on a shared machine (a
+    scheduler hiccup lands in one pass and is dropped), so the derived
+    on-vs-off percentage row is meaningful within a single invocation
+    instead of relying on run.py's cross-invocation --repeat merge.
+    """
+    # warm: compile the write and prime one full update cycle
+    heap, red = write(heap, red, keys[0], vals)
+    red, _ = store.tick({"heap": heap}, red, 1)
+    red = store.settle(red, {"heap": heap})
+    jax.block_until_ready(heap)
+    step = 2
+    best = float("inf")
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        for i in range(steps):
+            if not quiescent:
+                heap, red = write(heap, red, keys[i % len(keys)], vals)
+            red, _ = store.tick({"heap": heap}, red, step, step_time=0.01)
+            step += 1
+        best = min(best, (time.perf_counter() - t0) / steps * 1e6)
+    red = store.settle(red, {"heap": heap})
+    jax.block_until_ready((heap, jax.tree.leaves(red)))
+    return best
+
+
+def run_overhead(steps: int = 200, n_rows: int = 2048, batch: int = 64):
+    from repro.health import HealthPolicy
+
+    keys = key_stream("uniform", 16, batch, n_rows)
+    vals = jnp.ones((batch, ROW_ELEMS), jnp.float32)
+    rows = []
+    us = {}
+    for quiescent in (False, True):
+        kind = "quiescent" if quiescent else "healthy"
+        for on in (False, True):
+            hp = HealthPolicy(violation_mode="report") if on else None
+            store, heap, red, write = _mk(n_rows, health=hp)
+            u = _tick_us(store, heap, red, write, keys, vals, steps,
+                         quiescent)
+            us[(kind, on)] = u
+            rows.append((f"health/tick_{kind}_{'on' if on else 'off'}",
+                         u, f"best-of-3 mean tick wall, governor "
+                            f"{'on' if on else 'off'} ({steps} ticks/pass)"))
+    pct = (us[("healthy", True)] / max(us[("healthy", False)], 1e-9) - 1.0) \
+        * 100.0
+    # Quiescent ticks are ~10us no-ops, so a percentage there is noise
+    # amplification — report the absolute bookkeeping cost instead.
+    qd = us[("quiescent", True)] - us[("quiescent", False)]
+    rows.append(("health/governor_overhead", 0.0,
+                 f"{pct:+.1f}% added tick stall on a healthy store "
+                 f"(acceptance <= 5%; quiescent bookkeeping "
+                 f"{qd:+.1f}us on a {us[('quiescent', False)]:.0f}us "
+                 f"no-op tick)"))
+    return rows
+
+
+def run_recovery(n_rows: int = 256, batch: int = 32):
+    """Wedged-dispatch storm -> CRITICAL -> count ticks back to HEALTHY.
+
+    Deterministic: the module-level in-flight probe is patched to report
+    "never ready", so every async dispatch times out (rung 1), retries
+    exhaust, and the breaker escalates to CRITICAL with sync escalation
+    (rung 4).  The sync-escalated group then updates via the blocking
+    path, accrues calm ticks, and steps down CRITICAL -> DEGRADED ->
+    HEALTHY; the measured count is the hysteresis 2 x recovery_ticks.
+    """
+    import repro.core.store as store_mod
+    from repro.health import CRITICAL, HealthPolicy
+
+    hp = HealthPolicy(dispatch_timeout_s=1e-6, dispatch_retry_attempts=1,
+                      retry_backoff_s=0.0, backpressure="none",
+                      recovery_ticks=3, violation_mode="report")
+    store, heap, red, write = _mk(n_rows, health=hp)
+    hg = store._health
+    hg._sleep = lambda s: None
+    keys = key_stream("uniform", 8, batch, n_rows)
+    vals = jnp.ones((batch, ROW_ELEMS), jnp.float32)
+    step = 1
+    for i in range(4):                       # calm warmup traffic
+        heap, red = write(heap, red, keys[i % len(keys)], vals)
+        red, _ = store.tick({"heap": heap}, red, step, step_time=0.01)
+        step += 1
+
+    real_ready = store_mod._ready
+    store_mod._ready = lambda fits: False    # wedge the in-flight probe
+    try:
+        storm = 0
+        while storm < 64:                    # drive until the breaker trips
+            heap, red = write(heap, red, keys[step % len(keys)], vals)
+            red, _ = store.tick({"heap": heap}, red, step, step_time=0.01)
+            step += 1
+            storm += 1
+            rep = hg.last_report
+            if rep is not None and rep.worst == CRITICAL:
+                break
+        recovery = 0
+        while recovery < 200:                # calm ticks under sync escalation
+            heap, red = write(heap, red, keys[step % len(keys)], vals)
+            red, _ = store.tick({"heap": heap}, red, step, step_time=0.01)
+            step += 1
+            recovery += 1
+            if hg.last_report.worst == "healthy":
+                break
+    finally:
+        store_mod._ready = real_ready
+    red = store.settle(red, {"heap": heap})
+    ok = hg.last_report.worst == "healthy"
+    return [("chaos/recovery_ticks", 0.0,
+             f"{recovery} ticks CRITICAL->HEALTHY under wedged-dispatch "
+             f"storm (tripped in {storm}; hysteresis 2x{hp.recovery_ticks} "
+             f"calm ticks{'' if ok else '; WARN: never recovered'})")]
+
+
+def run(steps: int = 200, n_rows: int = 2048, batch: int = 64):
+    rows = run_overhead(steps=steps, n_rows=n_rows, batch=batch)
+    rows.extend(run_recovery(n_rows=min(n_rows, 256)))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

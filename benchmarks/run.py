@@ -43,6 +43,7 @@ SMOKE_KW = {
                         sharded_steps=8, sharded_rows=128),
     "remesh_bench": dict(steps=12, n_rows=512, read_iters=8,
                          sharded_steps=8, sharded_rows=128),
+    "health_bench": dict(steps=60, n_rows=512, batch=32),
 }
 
 
@@ -77,10 +78,10 @@ def main(argv=None) -> None:
                         "the minimum too)")
     args = p.parse_args(argv)
 
-    from . import (battery, dirty_cost, fio_patterns, insert_throughput,
-                   kernel_bench, mttdl_bench, op_latency, overlap,
-                   overwrite_scaling, remesh_bench, roofline, scrub_bench,
-                   ycsb)
+    from . import (battery, dirty_cost, fio_patterns, health_bench,
+                   insert_throughput, kernel_bench, mttdl_bench, op_latency,
+                   overlap, overwrite_scaling, remesh_bench, roofline,
+                   scrub_bench, ycsb)
     from .common import emit
 
     modules = [
@@ -95,6 +96,7 @@ def main(argv=None) -> None:
         ("sec4.8 mttdl", mttdl_bench),
         ("scrub patrol + rebuild", scrub_bench),
         ("elastic remesh + degraded reads", remesh_bench),
+        ("health governor + breaker recovery", health_bench),
         ("kernel fusion", kernel_bench),
         ("roofline", roofline),
     ]

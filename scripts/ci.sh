@@ -33,9 +33,9 @@ echo "== [3/6] tier-1 on the blocking tick (REPRO_ASYNC_TICK=0) =="
 if [ "${CI_FULL_BOTH:-0}" = "1" ]; then
   BLOCKING_TARGETS=(tests)
 else
-  # (test_faults.py is absent on purpose: its stores pin async_tick
-  # explicitly, so the env lever is a no-op there — the fault battery in
-  # step 4 covers that surface once.)
+  # (test_faults.py and test_health.py are absent on purpose: their
+  # stores pin async_tick explicitly, so the env lever is a no-op there —
+  # the fault battery + chaos soak in step 5 cover that surface once.)
   BLOCKING_TARGETS=(tests/test_store.py tests/test_async_tick.py
                     tests/test_workqueue.py tests/test_engine.py
                     tests/test_recovery.py tests/test_ckpt.py
@@ -65,6 +65,11 @@ echo "== [5/6] fault-injection battery (crash sweep + oracle + sharded) =="
 # a 2x2x2 mesh-sharded store; exit 1 on any unrecoverable crash, missed
 # detection, or false positive (see docs/testing.md).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.faults --smoke
+# Chaos soak: seeded storm schedule (bitflips + crash + straggler storms
+# + a mid-storm remesh/rebuild) under live traffic with the health
+# governor on; exit 1 on any silent freshness excursion, a typed-but-
+# unreported violation, or a non-bitwise post-storm recovery.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.faults --chaos --smoke
 
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
   echo "== [6/6] smoke benchmark (tiny shapes) + perf artifact + guard =="
@@ -75,26 +80,32 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # detection latencies (fault injector + patroller); scrub_bench measures
   # the patroller's foreground overhead and the online shard-rebuild stall;
   # remesh_bench measures the elastic 4 -> 8 grow migration (throughput +
-  # bounded foreground stall) and the degraded-read latency floor.
-  # The JSON artifact (BENCH_PR7.json) is the machine-readable perf
+  # bounded foreground stall) and the degraded-read latency floor;
+  # health_bench measures the governor's added tick stall on a healthy
+  # store (acceptance: <= 5%) and the breaker's trip -> recover tick
+  # count under a wedged dispatcher.
+  # The JSON artifact (BENCH_PR8.json) is the machine-readable perf
   # trajectory — docs/perf.md.
   # --repeat 3: per-row best-of-N — the shared container's scheduler can
   # swing multi-ms rows >2x between identical runs; the minimum is stable
   # and a real regression raises it too.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
       --smoke --repeat 3 \
-      --only insert_throughput,dirty_cost,overlap,mttdl_bench,scrub_bench,remesh_bench \
-      --json "${BENCH_JSON:-BENCH_PR7.json}"
+      --only insert_throughput,dirty_cost,overlap,mttdl_bench,scrub_bench,remesh_bench,health_bench \
+      --json "${BENCH_JSON:-BENCH_PR8.json}"
   # Regression guard: compare key rows against the prior checked-in
   # artifact; >2x slowdowns fail the build (BENCH_GUARD_TOL overrides).
   # --require: the multi-device legs must actually produce their rows —
   # a spawn failure degrades to */ERROR rows, which must fail CI, not
-  # silently drop coverage.
+  # silently drop coverage.  health/governor_overhead and
+  # chaos/recovery_ticks are derived rows (us=0): presence-required,
+  # never time-guarded.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/bench_guard.py \
-      "${BENCH_JSON:-BENCH_PR7.json}" --baseline BENCH_PR6.json \
+      "${BENCH_JSON:-BENCH_PR8.json}" --baseline BENCH_PR7.json \
       --require 'overlap/endtoend_*' --require 'scrub/patrol_tick_*' \
       --require 'scrub/rebuild_ticks' --require 'mttdl/patrol/improvement' \
       --require 'remesh/migrate_ticks' --require 'remesh/throughput' \
-      --require 'remesh/stall' --require 'remesh/degraded_read'
+      --require 'remesh/stall' --require 'remesh/degraded_read' \
+      --require 'health/governor_overhead' --require 'chaos/recovery_ticks'
 fi
 echo "== CI OK =="

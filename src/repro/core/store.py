@@ -149,9 +149,24 @@ class RedundancyPolicy:
     remesh_bytes_per_tick: int = 0
     # Degraded reads (``store.read_verified``): bounded retry/backoff when a
     # block cannot be immediately verified or reconstructed — a transiently
-    # vulnerable stripe may settle within the retry budget.
+    # vulnerable stripe may settle within the retry budget.  The backoff is
+    # exponential (base * 2**attempt) with a hard per-delay cap, a seeded
+    # jitter fraction that only ever *shrinks* delays, and a cumulative
+    # total budget — repro.health.backoff.backoff_schedule, the same
+    # schedule the health governor's dispatch-retry rung uses.
     read_retry_attempts: int = 3
     read_retry_backoff_s: float = 0.0
+    read_retry_backoff_cap_s: float = 0.0    # 0 = uncapped
+    read_retry_total_s: float = 0.0          # 0 = unbudgeted
+    read_retry_jitter_frac: float = 0.0
+    # Freshness-SLO health governor (repro.health; docs/api.md): a
+    # HealthPolicy (or True for defaults) arms per-group breakers
+    # (HEALTHY -> DEGRADED -> CRITICAL, hysteresis on recovery) and the
+    # escalation ladder — wedged-dispatch retry, margin-forced blocking
+    # resolve, on_write backpressure, temporary sync escalation — that
+    # *enforces* max_vulnerable_steps/_seconds instead of best-effort.
+    # None (default) keeps the governor off: zero tick overhead.
+    health: Optional[Any] = None
 
     def leaf_policy(self, name: str) -> LeafPolicy:
         for pattern, lp in self.rules:
@@ -267,6 +282,10 @@ class TickReport:
     # remesh running).  On the adoption tick this is the final status with
     # ``done=True`` and the returned red is already the new geometry.
     remesh: Optional[Any] = None
+    # Health governor observability (repro.health.HealthReport; None when
+    # the governor is disabled): per-group breaker states, escalation-
+    # ladder actions, vulnerability ages, and freshness violations.
+    health: Optional[Any] = None
 
 
 def _ready(x) -> bool:
@@ -299,6 +318,14 @@ class _Pending:
     queued: bool
     step: int
     coalesced: int = 0
+    # Health-governor bookkeeping: wall-clock dispatch timestamp (wedged-
+    # dispatch detection) and the group's freshness clocks as they stood
+    # *before* this dispatch — abandoning a wedged update rolls back to
+    # these, so the deadline keeps counting from the oldest unprotected
+    # write.
+    dispatched_at: float = dataclasses.field(default_factory=time.monotonic)
+    prev_step: int = 0
+    prev_time: float = 0.0
 
 
 @dataclasses.dataclass
@@ -344,6 +371,9 @@ class ProtectedStore:
         # Scrub patroller (repro.scrub) — built by attach() when the policy
         # enables it (patrol_bytes_per_tick > 0) and a vilamb group exists.
         self.patroller: Optional[Any] = None
+        # Freshness-SLO health governor (repro.health) — built by attach()
+        # when policy.health is set; None = off, zero tick overhead.
+        self._health: Optional[Any] = None
         # Elastic remesh (repro.remesh): a queued geometry-change request,
         # the active migrator, and the mesh-geometry epoch counter (bumped
         # at every remesh adoption; cross-shard parity images carry the
@@ -450,6 +480,13 @@ class ProtectedStore:
             # Runtime import: repro.scrub builds on repro.core submodules.
             from repro.scrub import ScrubPatroller
             self.patroller = ScrubPatroller(self)
+        self._health = None
+        if self.policy.health:
+            # Runtime import: repro.health builds on repro.core submodules.
+            from repro.health import HealthGovernor, HealthPolicy
+            hp = self.policy.health
+            self._health = HealthGovernor(
+                self, hp if isinstance(hp, HealthPolicy) else None)
         return self
 
     @classmethod
@@ -586,6 +623,12 @@ class ProtectedStore:
         ``none`` passes through.  Leaves absent from ``events`` are left
         unmarked — use :meth:`expand_events` for dense default-ALL marking.
         """
+        if self._health is not None:
+            # Rung-3 admission control: while some breaker is CRITICAL the
+            # governor throttles (spin) or rejects (BackpressureError)
+            # foreground writes so the device can drain.  No-op under a jax
+            # trace and while every breaker is below CRITICAL.
+            self._health.admit(red)
         events = dict(events or {})
         row_diffs = dict(row_diffs or {})
         out = dict(red)
@@ -819,7 +862,12 @@ class ProtectedStore:
             fits = self._fits_all_fn(g.label)(fits)
         if hasattr(fits, "copy_to_host_async"):
             fits.copy_to_host_async()
-        g.pending = _Pending(red=out_red, fits=fits, queued=queued, step=step)
+        # prev_* snapshot the freshness clocks as they stand now (the tick
+        # bumps them only after dispatch): the governor's wedged-dispatch
+        # abandon rolls back to these.
+        g.pending = _Pending(red=out_red, fits=fits, queued=queued, step=step,
+                             prev_step=g.last_update_step,
+                             prev_time=g.last_update_time)
         return {n: dataclasses.replace(
                     red_sub[n], dirty=fresh[n], shadow=snaps[n])
                 for n in g.names}
@@ -997,6 +1045,9 @@ class ProtectedStore:
                 materialized = leaves()
             return materialized
 
+        hg = self._health
+        if hg is not None:
+            hg.begin_tick(step, now)
         # During an active remesh migration the foreground group loop is
         # skipped wholesale: the OLD red stays frozen (authoritative for a
         # crash) while writes keep marking it via on_write, and the
@@ -1021,6 +1072,17 @@ class ProtectedStore:
             sp = scrub_period if scrub_period is not None else lp.scrub_period_steps
             scrub_due = bool(sp and policy_mod.should_scrub(step, sp))
             if lp.mode == "vilamb":
+                margin = sync_esc = retry = False
+                if hg is not None:
+                    # Escalation-ladder rung 1: a wedged in-flight update is
+                    # abandoned (freshness clocks roll back to pre-dispatch)
+                    # and re-dispatched below after a bounded backoff.  The
+                    # retry flag forces the dispatch this tick: ``due`` is
+                    # step-aligned, so waiting for the next period boundary
+                    # would let the breaker cool down between retries.
+                    retry = hg.check_pending(g)
+                    sync_esc = hg.is_sync_escalated(g.label)
+                    margin = hg.within_margin(g, step, now)
                 eff = min(lp.period_steps * self._governor.scale,
                           self.policy.period_cap)
                 due = policy_mod.should_update(step, eff)
@@ -1029,14 +1091,17 @@ class ProtectedStore:
                      and step - g.last_update_step >= lp.max_vulnerable_steps)
                     or (lp.max_vulnerable_seconds > 0
                         and now - g.last_update_time >= lp.max_vulnerable_seconds))
-                if self._async_group(g):
+                if self._async_group(g) and not sync_esc:
                     # Overlap pipeline: resolve lazily (blocking only when a
                     # deadline or a scrub forces settled state), then keep the
                     # pipeline primed with at most one in-flight update.
                     had_pending = g.pending is not None
+                    # Rung 2: within the governor's deadline margin the tick
+                    # stops speculating — resolve blocking and re-dispatch,
+                    # meeting the deadline early instead of missing it.
                     res, ovf, deferred = self._resolve(
                         g, {n: out[n] for n in g.names},
-                        wait=overdue or scrub_due)
+                        wait=overdue or scrub_due or margin)
                     if res is None:
                         # Still in flight: fold this due tick into it.  The
                         # deadline clock keeps running, so a wedged device
@@ -1052,16 +1117,21 @@ class ProtectedStore:
                         out.update(res)
                         if had_pending and self._phase_hooks:
                             self._phase(
-                                "adopt_forced" if (overdue or scrub_due)
+                                "adopt_forced" if (overdue or scrub_due
+                                                   or margin)
                                 else "adopt", red=dict(out), group=g.label,
                                 step=step, overflowed=ovf)
+                        if (had_pending and margin
+                                and not (overdue or scrub_due)
+                                and hg is not None):
+                            hg.note_forced_resolve(g.label, step)
                         if ovf:
                             # Speculation missed: the queued program could not
                             # cover the snapshot (its blocks stayed marked via
                             # the shadow select).  Run the always-correct full
                             # program now.
                             overflowed.append(g.label)
-                        if ovf or due or overdue or deferred:
+                        if ovf or due or overdue or deferred or margin or retry:
                             out.update(self._dispatch_async(
                                 g, group_leaves(),
                                 {n: out[n] for n in g.names}, step,
@@ -1073,11 +1143,19 @@ class ProtectedStore:
                                 self._phase("dispatch", red=dict(out),
                                             group=g.label, step=step,
                                             queued=g.pending.queued)
-                            if due or overdue:
+                            if due or overdue or margin:
                                 updated.append(g.label)
                             if overdue and not due:
                                 deadline.append(g.label)
-                elif due or overdue:
+                elif sync_esc or due or overdue or margin:
+                    if g.pending is not None:
+                        # Rung 4 engaged with an update still in flight
+                        # (e.g. escalation via a reported violation): adopt
+                        # it first — a stale pending resolved *after* the
+                        # blocking pass would clobber newer checksums.
+                        red_sub, _, _ = self._resolve(
+                            g, {n: out[n] for n in g.names}, wait=True)
+                        out.update(red_sub)
                     out.update(self._dispatch_blocking(
                         g, group_leaves(), {n: out[n] for n in g.names}))
                     g.last_update_step = step
@@ -1117,6 +1195,38 @@ class ProtectedStore:
             lv.update(report.repaired)      # moved leaves, if started now
             self._remesh_step(lv, out, report, step)
             ran_remesh = True
+        if hg is not None and ran_remesh:
+            # The group loop was suspended this tick (old-geometry red is
+            # authoritative until adoption) — the one window the ladder
+            # above cannot cover.  When a group's freshness margin expired
+            # mid-migration, drain the remaining windows synchronously
+            # (remesh_drain, rung 2: the SLO beats the bounded per-tick
+            # window), then run blocking updates post-adoption.  With
+            # remesh_drain=False the migration keeps its bound and end_tick
+            # reports the violation instead — never silent either way.
+            forced = hg.remesh_overdue(step, now)
+            if forced and self._remesh is not None and hg.hp.remesh_drain:
+                lv = dict(get_leaves())
+                lv.update(report.repaired)
+                while self._remesh is not None:
+                    self._remesh_step(lv, out, report, step)
+            if forced and self._remesh is None:
+                lv = dict(get_leaves())
+                lv.update(report.repaired)   # moved leaves (new geometry)
+                extra = []
+                for g in self._protected():
+                    if g.policy.mode != "vilamb" or g.label not in forced:
+                        continue
+                    out.update(self._dispatch_blocking(
+                        g, {n: lv[n] for n in g.names},
+                        {n: out[n] for n in g.names}))
+                    g.last_update_step = step
+                    g.last_update_time = now
+                    extra.append(g.label)
+                    hg.note_remesh_drain(g.label, step)
+                report.updated = report.updated + tuple(extra)
+                report.deadline_fired = report.deadline_fired + tuple(extra)
+                updated.extend(extra)
         if self.patroller is not None and not ran_remesh:
             # Low-priority background duty, after every foreground decision:
             # the patroller sees the post-dispatch live view (in-flight
@@ -1132,6 +1242,11 @@ class ProtectedStore:
             self.patroller.on_tick(
                 get_leaves, out, step, report,
                 busy=bool(updated) or self._remesh_request is not None)
+        if hg is not None:
+            # Age audit + breaker transitions; attaches report.health and
+            # raises FreshnessViolationError only when the ladder is
+            # exhausted and a deadline is still blown (violation_mode).
+            hg.end_tick(report, step, now)
         if self._phase_hooks:
             self._phase("tick", red=dict(out), step=step, report=report)
         return out, report
@@ -1366,7 +1481,15 @@ class ProtectedStore:
                 raise IndexError(f"{name}: global block {b} out of range "
                                  f"(0..{k * meta.n_blocks - 1})")
         attempts = max(1, int(self.policy.read_retry_attempts))
-        backoff = float(self.policy.read_retry_backoff_s)
+        # Exponential, capped, jittered, budget-bounded retry delays — the
+        # same schedule the health governor's dispatch-retry rung uses
+        # (base 0 = the backwards-compatible no-sleep default).
+        from repro.health.backoff import backoff_schedule
+        delays = backoff_schedule(
+            attempts - 1, float(self.policy.read_retry_backoff_s),
+            cap=float(self.policy.read_retry_backoff_cap_s),
+            total=float(self.policy.read_retry_total_s),
+            jitter_frac=float(self.policy.read_retry_jitter_frac))
         results: Dict[int, np.ndarray] = {}
 
         def shard_lanes(arr: np.ndarray, s: int) -> np.ndarray:
@@ -1381,8 +1504,8 @@ class ProtectedStore:
             pending = [b for b in want if b not in results]
             if not pending:
                 break
-            if attempt and backoff > 0:
-                time.sleep(backoff * attempt)
+            if attempt and delays[attempt - 1] > 0:
+                time.sleep(delays[attempt - 1])
             arr = np.asarray(leaves[name])
             r = red[name]
             live = bits_to_mask(

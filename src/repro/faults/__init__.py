@@ -20,18 +20,27 @@ window.  This package makes that claim executable:
   false positives, feeding measured detection latencies into
   :mod:`repro.core.mttdl`.
 
+* :mod:`repro.faults.chaos` — the chaos-soak battery: a seeded
+  :class:`ChaosSchedule` composing bitflips, a crash point, straggler
+  storms, wholesale shard loss, and a mid-rebuild remesh under live
+  traffic, with an invariant checker (no stale ``read_verified`` bytes,
+  no silent freshness violations, bitwise post-storm recovery).
+
 ``python -m repro.faults --smoke`` runs the CI battery (crash sweep +
-oracle over several seeds); see ``docs/testing.md``.
+oracle over several seeds); ``python -m repro.faults --chaos --smoke``
+runs the chaos soak; see ``docs/testing.md``.
 """
 from .inject import (FAULT_KINDS, FaultInjector, FaultSpec, apply_fault)
 from .crashpoints import (CRASH_PHASES, CrashOutcome, CrashPlan,
                           CrashPointMachine)
 from .oracle import (DetectionRecord, OracleReport, VulnerabilityWindow,
                      check_detection, vulnerability_window)
+from .chaos import (ChaosResult, ChaosSchedule, StormPhase, run_chaos_soak)
 
 __all__ = [
     "FAULT_KINDS", "FaultInjector", "FaultSpec", "apply_fault",
     "CRASH_PHASES", "CrashOutcome", "CrashPlan", "CrashPointMachine",
     "DetectionRecord", "OracleReport", "VulnerabilityWindow",
     "check_detection", "vulnerability_window",
+    "ChaosResult", "ChaosSchedule", "StormPhase", "run_chaos_soak",
 ]

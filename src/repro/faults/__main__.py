@@ -360,6 +360,40 @@ def sharded_pass(seed: int, steps: int) -> int:
     return 0
 
 
+def chaos_child(seed: int, smoke: bool) -> int:
+    """Runs inside the 8-device subprocess: the full multi-storm soak
+    (bitflips + straggler storm + crash + shard loss + mid-rebuild remesh
+    under live traffic; see repro.faults.chaos)."""
+    from .chaos import run_chaos_soak
+    r = run_chaos_soak(seed, sharded=True, smoke=smoke, verbose=print)
+    print(f"  chaos soak: {r.summary()}")
+    return 0 if r.ok() else 1
+
+
+def chaos_pass(seed: int, smoke: bool) -> int:
+    """Spawn the chaos soak under 8 forced host devices (the shard-loss
+    and remesh storm phases need a mesh; XLA_FLAGS must predate the jax
+    import, so this re-execs the module)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    cmd = [sys.executable, "-m", "repro.faults", "--chaos-child",
+           "--seeds", str(seed)]
+    if smoke:
+        cmd.append("--smoke")
+    try:
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=1800)
+    except Exception as e:
+        print(f"  chaos soak subprocess FAILED ({e!r})")
+        return 1
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        sys.stdout.write(r.stderr[-4000:])
+        print(f"  chaos soak subprocess FAILED (exit {r.returncode})")
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
@@ -368,12 +402,27 @@ def main(argv=None) -> int:
     p.add_argument("--steps", type=int, default=6)
     p.add_argument("--no-sharded", action="store_true",
                    help="skip the multi-device (subprocess) battery")
+    p.add_argument("--chaos", action="store_true",
+                   help="run ONLY the chaos soak (seeded multi-storm run "
+                        "under live traffic, 8 host devices)")
     p.add_argument("--sharded-child", action="store_true",
+                   help=argparse.SUPPRESS)   # internal: runs in-process
+    p.add_argument("--chaos-child", action="store_true",
                    help=argparse.SUPPRESS)   # internal: runs in-process
     args = p.parse_args(argv)
 
     if args.sharded_child:
         return sharded_child(args.seeds, args.steps)
+    if args.chaos_child:
+        return chaos_child(args.seeds, args.smoke)
+    if args.chaos:
+        t0 = time.time()
+        print("== chaos soak (multi-storm, live traffic, 8 host devices) ==")
+        fails = chaos_pass(args.seeds if args.seeds != 3 else 0, args.smoke)
+        dt = time.time() - t0
+        print(f"== chaos soak {'OK' if not fails else 'FAILED'} "
+              f"in {dt:.1f}s ==")
+        return 1 if fails else 0
 
     t0 = time.time()
     fails = 0

@@ -1,0 +1,19 @@
+"""Freshness-SLO health governor (see governor.py module docstring).
+
+Enable by setting ``RedundancyPolicy(health=HealthPolicy(...))`` (or
+``health=True`` for defaults); the store constructs the governor in
+``attach`` and surfaces per-tick state on ``TickReport.health``.
+"""
+from repro.health.backoff import backoff_delay, backoff_schedule
+from repro.health.governor import (
+    BREAKER_STATES, CRITICAL, DEGRADED, HEALTHY,
+    BackpressureError, FreshnessViolation, FreshnessViolationError,
+    HealthAction, HealthGovernor, HealthPolicy, HealthReport,
+)
+
+__all__ = [
+    "backoff_delay", "backoff_schedule",
+    "BREAKER_STATES", "HEALTHY", "DEGRADED", "CRITICAL",
+    "HealthPolicy", "HealthAction", "HealthReport", "HealthGovernor",
+    "BackpressureError", "FreshnessViolation", "FreshnessViolationError",
+]

@@ -329,7 +329,15 @@ class RemeshMigrator:
         groups = {}
         for label, g in store.groups.items():
             eng = self.new_engines.get(label) if g.engine is not None else None
-            groups[label] = _Group(label, g.policy, g.names, eng)
+            # Carry the freshness clocks: the deadline counts from the
+            # oldest unprotected write, and a migration moves data without
+            # updating redundancy for post-start writes — a fresh _Group's
+            # default clocks (step 0 / now) would both fire a spurious
+            # steps-deadline right after adoption AND silently extend the
+            # wall-clock deadline by the whole migration.
+            groups[label] = _Group(label, g.policy, g.names, eng,
+                                   last_update_step=g.last_update_step,
+                                   last_update_time=g.last_update_time)
         store.groups = groups
         for n, meta in list(store._none_metas.items()):
             lshape = _local_shape(store._structs[n].shape,

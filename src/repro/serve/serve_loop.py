@@ -107,6 +107,8 @@ class Server:
         out = [token]
         mismatches = 0
         remesh_status = None
+        health_status = None
+        health_actions = 0
         last = time.perf_counter()
         for t in range(n_tokens - 1):
             logits, caches, red, token = self.decode(params, caches, red, token, pos + t)
@@ -120,6 +122,12 @@ class Server:
                 mismatches += report.mismatches
                 if report.remesh is not None:
                     remesh_status = report.remesh
+                if report.health is not None:
+                    # Health-governor surface: the last tick's breaker
+                    # states plus a cumulative escalation-action count for
+                    # the whole generate call (SLO dashboards watch these).
+                    health_status = report.health
+                    health_actions += len(report.health.actions)
                 if report.repaired:
                     # The scrub patroller repaired or rebuilt cache leaves
                     # (or a remesh migrated them onto the new mesh); decode
@@ -141,4 +149,6 @@ class Server:
                 caches = unflatten_dict(flat)
         return jnp.stack(out, axis=1), {"mismatches": mismatches, "red": red,
                                         "caches": caches, "pos": pos + n_tokens - 1,
-                                        "remesh": remesh_status}
+                                        "remesh": remesh_status,
+                                        "health": health_status,
+                                        "health_actions": health_actions}

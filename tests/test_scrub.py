@@ -40,12 +40,23 @@ def make_store(n_rows=32, cols=512, patrol_blocks=8, **kw):
     return store, leaves, store.init(leaves)
 
 
+def wait_probe(store):
+    """Determinism under machine load: the next probe only dispatches
+    once the previous one's flags have landed, so a loaded host would
+    otherwise see fewer probes per N ticks (flaky pacing/sweep counts).
+    Same idiom as tests/subproc.py's pending-update wait."""
+    if store.patroller is not None and store.patroller._probe is not None:
+        _, _, _, mism_d, clean_d, _, _ = store.patroller._probe
+        jax.block_until_ready((mism_d, clean_d))
+
+
 def quiet_ticks(store, leaves, red, step, n):
     for _ in range(n):
         red, rep = store.tick(leaves, red, step, scrub_period=0)
         if rep.repaired:
             leaves = dict(leaves, **rep.repaired)
         step += 1
+        wait_probe(store)
     return leaves, red, step
 
 
@@ -89,6 +100,7 @@ def test_patrol_full_coverage_within_bound():
     for _ in range(bound):
         red, _ = store.tick(leaves, red, step, scrub_period=0)
         step += 1
+        wait_probe(store)
         if pat.sweeps["w"] >= 1:
             break
     assert pat.sweeps["w"] >= 1, (pat.sweeps, pat.cursor, bound)

@@ -164,6 +164,32 @@ def test_straggler_backoff_recovers():
     assert g.scale == 1
 
 
+def test_straggler_re_stretches_after_recovery():
+    """A second storm after full recovery must stretch again: the spike
+    left in the rolling window must not inflate the median enough to
+    mask it, and the calm counter must restart from zero."""
+    g = StragglerGovernor(factor=3.0, window=8, recovery_steps=4)
+    for _ in range(8):
+        g.observe(0.01)
+    g.observe(0.5)
+    assert g.scale == 2
+    for i in range(4):
+        g.observe(0.01)
+        assert g.scale == (1 if i == 3 else 2)   # no early half-step
+    g.observe(0.5)                      # second storm, spike still in window
+    assert g.scale == 2
+    g.observe(0.5)                      # sustained: doubles, never resets
+    assert g.scale == 4
+    for _ in range(3):                  # partial calm does not recover...
+        g.observe(0.01)
+    assert g.scale == 4
+    g.observe(0.01)                     # ...the 4th consecutive step does
+    assert g.scale == 2
+    for _ in range(4):
+        g.observe(0.01)
+    assert g.scale == 1                 # staged recovery: one halving per run
+
+
 def test_tick_applies_governor_to_period():
     policy = RedundancyPolicy.single("vilamb", period_steps=2,
                                      lanes_per_block=128,
