@@ -34,8 +34,11 @@ SMOKE_KW = {
     # fig9a capped at 4096 rows; the fig9c sweep keeps its representative
     # region size (sweep_rows default) even in smoke mode — see dirty_cost.
     "dirty_cost": dict(n_rows=4096, iters=10),
+    # The sharded leg keeps its full-size shapes even in smoke mode: the
+    # multi-group batching win only shows once per-due-tick update work is
+    # non-trivial (see overlap.py), and the leg is ~15 s wall.
     "overlap": dict(steps=120, n_rows=2048, batch=32, repeats=2,
-                    sharded_steps=60),
+                    sharded_steps=40),
     "battery": dict(n_rows=1024),
     "mttdl_bench": dict(n_rows=1024, steps=12),
     "kernel_bench": dict(nb=128, L=512),

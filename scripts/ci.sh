@@ -84,7 +84,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   # health_bench measures the governor's added tick stall on a healthy
   # store (acceptance: <= 5%) and the breaker's trip -> recover tick
   # count under a wedged dispatcher.
-  # The JSON artifact (BENCH_PR8.json) is the machine-readable perf
+  # The JSON artifact (BENCH_PR10.json) is the machine-readable perf
   # trajectory — docs/perf.md.
   # --repeat 3: per-row best-of-N — the shared container's scheduler can
   # swing multi-ms rows >2x between identical runs; the minimum is stable
@@ -92,17 +92,20 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run \
       --smoke --repeat 3 \
       --only insert_throughput,dirty_cost,overlap,mttdl_bench,scrub_bench,remesh_bench,health_bench \
-      --json "${BENCH_JSON:-BENCH_PR8.json}"
+      --json "${BENCH_JSON:-BENCH_PR10.json}"
   # Regression guard: compare key rows against the prior checked-in
   # artifact; >2x slowdowns fail the build (BENCH_GUARD_TOL overrides).
   # --require: the multi-device legs must actually produce their rows —
   # a spawn failure degrades to */ERROR rows, which must fail CI, not
-  # silently drop coverage.  health/governor_overhead and
-  # chaos/recovery_ticks are derived rows (us=0): presence-required,
-  # never time-guarded.
+  # silently drop coverage.  overlap_sharded/overhead_reduction is the
+  # PR10 flagship row (pipelined must beat blocking on the mesh);
+  # health/governor_overhead and chaos/recovery_ticks are derived rows
+  # (us=0): presence-required, never time-guarded.
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/bench_guard.py \
-      "${BENCH_JSON:-BENCH_PR8.json}" --baseline BENCH_PR7.json \
-      --require 'overlap/endtoend_*' --require 'scrub/patrol_tick_*' \
+      "${BENCH_JSON:-BENCH_PR10.json}" --baseline BENCH_PR8.json \
+      --require 'overlap/endtoend_*' \
+      --require 'overlap_sharded/overhead_reduction' \
+      --require 'scrub/patrol_tick_*' \
       --require 'scrub/rebuild_ticks' --require 'mttdl/patrol/improvement' \
       --require 'remesh/migrate_ticks' --require 'remesh/throughput' \
       --require 'remesh/stall' --require 'remesh/degraded_read' \

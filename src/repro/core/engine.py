@@ -13,8 +13,8 @@ and per-leaf PartitionSpecs, every redundancy computation runs under
 parity, bitvector, and meta-checksum arrays are sharded alongside their
 leaf.  That includes the ∝-dirty work-queue variant (each shard owns a
 fixed-capacity queue sized from its local stripe count) and the overlap
-form, whose per-shard fit flags are AND-folded outside the update program
-(see ``redundancy_step_async``).
+form, whose per-shard fit flags are AND-folded on the host after the fetch
+— never on device (see ``redundancy_step_async``).
 """
 from __future__ import annotations
 
@@ -463,9 +463,11 @@ class RedundancyEngine:
         is the **per-shard** flag array (global shape ``(n_devices,)``,
         sharded over every mesh axis).  The overflow select is per shard
         too — only the shards whose local queue overflowed keep their
-        snapshot marked.  Dispatchers AND-fold the flags into the single
-        "all shards fit" scalar in a separate tiny program
-        (``ProtectedStore._fits_all_fn``) so this program stays
+        snapshot marked.  Dispatchers never fold the flags on device: the
+        store stacks them into its batched fits vector and AND-folds the
+        fetched row on the host at resolution
+        (``repro.core.workqueue.fold_fits_host``), so this program — and
+        the batched multi-group program wrapping it — stays
         collective-free.
         """
         def local(ls, red_l):
@@ -674,7 +676,7 @@ class RedundancyEngine:
         shard's block-lane view stacked along a fresh leading axis.
 
         The cross-shard parity primitive: XOR-folding the result over dim0
-        (in a separate tiny program, like ``ProtectedStore._fits_all_fn``)
+        (in a separate tiny cross-shard host program)
         yields one parity row per *local* block covering the same-indexed
         block of every shard.  Per shard the body is a pure reshape —
         collective-free; machine-local it returns ``(1, nb, L)``.

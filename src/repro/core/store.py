@@ -22,7 +22,9 @@ from __future__ import annotations
 import collections
 import dataclasses
 import fnmatch
+import queue
 import statistics
+import threading
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
@@ -110,11 +112,26 @@ class RedundancyPolicy:
     # ``pipeline_depth=0`` reverts to the blocking tick (exact host-side
     # queue_fits dispatch); depth counts in-flight updates per group — 1 is
     # the implemented maximum, deeper requests coalesce.  Mesh-sharded
-    # groups overlap too: per-shard fit flags are AND-folded on device and
-    # fetched one tick ahead.  Defaults to the env lever
+    # groups overlap too: the per-shard fit flags come back inside the
+    # batched update program's stacked fits vector and are AND-folded on
+    # the host at resolution.  Defaults to the env lever
     # ``REPRO_ASYNC_TICK`` (scripts/ci.sh runs the suite both ways).
     async_tick: bool = dataclasses.field(default_factory=_async_tick_default)
     pipeline_depth: int = 1
+    # Off-thread tick resolver (docs/api.md): with the overlap pipeline
+    # on, the device->host fit fetch + AND-fold for each batched
+    # Algorithm-1 dispatch runs on a dedicated daemon thread; the
+    # foreground tick swaps epochs, dispatches the one batched program
+    # (asynchronously — jax never blocks on execution there), and adopts
+    # results the resolver has already folded to plain host bools.
+    # settle/flush and the deadline/scrub/governor forced-resolve paths
+    # join (wait for the resolver, which implies the fit signal landed).
+    # ``flush`` and a remesh adoption shut the thread down cleanly; it is
+    # re-created lazily on the next overlapped dispatch.  False resolves
+    # inline on the tick thread via the non-blocking fetch started at
+    # dispatch time (the PR3..PR8 behavior) — bitwise-identical either
+    # way.
+    dispatcher_thread: bool = True
     # AOT-compile every Algorithm-1 variant a group can dispatch at attach
     # time, so the first overlapped dispatch never hides a compile stall.
     precompile: bool = True
@@ -297,9 +314,9 @@ def _ready(x) -> bool:
 
 
 def _fits_host(x) -> bool:
-    """Host fold of a fetched fit signal: scalar (machine-local / already
-    AND-folded) or per-shard flag array alike."""
-    return bool(np.asarray(x).all())
+    """Host fold of a fetched fit signal: scalar (machine-local) or
+    per-shard flag array alike."""
+    return workqueue.fold_fits_host(x)
 
 
 @dataclasses.dataclass
@@ -307,17 +324,31 @@ class _Pending:
     """One in-flight overlapped Algorithm-1 update (per group).
 
     ``red`` holds the program's output arrays (futures until the device
-    finishes); ``fits`` is the device-computed queue-fit predicate, with a
-    host copy already in flight (``copy_to_host_async``).  Resolution
-    adopts the outputs into the live view, feeds ``fits`` forward as the
-    next speculation signal and, for a queued dispatch that overflowed,
-    triggers the full-recompute fallback.
+    finishes); ``fits`` is the batch's stacked device-computed queue-fit
+    vector (row ``fits_index`` belongs to this group; per-shard columns
+    under a mesh), with a host copy already in flight
+    (``copy_to_host_async`` — or, when the backend lacks it, pre-fetched
+    into ``fits_host`` at dispatch time so resolution never pays a
+    synchronous device round trip).  Resolution adopts the outputs into
+    the live view, feeds the fit row forward as the next speculation
+    signal and, for a queued dispatch that overflowed, triggers the
+    full-recompute fallback.
+
+    With the off-thread dispatcher, ``launched`` is the batch's shared
+    event, set once the resolver thread has fetched + folded the batch's
+    fit signal into ``fits_host`` — ``None`` means the dispatch ran in
+    inline mode (no thread; the fold happens lazily at resolution).  A
+    resolver failure lands in ``error`` and re-raises at resolution.
     """
-    red: Dict[str, Any]
+    red: Optional[Dict[str, Any]]
     fits: Any
     queued: bool
     step: int
     coalesced: int = 0
+    launched: Optional[threading.Event] = None
+    fits_index: int = 0
+    fits_host: Optional[bool] = None
+    error: Optional[BaseException] = None
     # Health-governor bookkeeping: wall-clock dispatch timestamp (wedged-
     # dispatch detection) and the group's freshness clocks as they stood
     # *before* this dispatch — abandoning a wedged update rolls back to
@@ -326,6 +357,77 @@ class _Pending:
     dispatched_at: float = dataclasses.field(default_factory=time.monotonic)
     prev_step: int = 0
     prev_time: float = 0.0
+
+
+def _launched(p: "_Pending") -> bool:
+    """Has the pending's resolver job finished (fit signal folded on the
+    host)?  ``launched`` is None in inline mode — always done, the fold
+    happens lazily at resolution instead."""
+    ev = p.launched
+    return ev is None or ev.is_set()
+
+
+def _pending_ready(p: "_Pending") -> bool:
+    """Non-blocking: resolver done AND the fit signal is resolvable
+    without a device sync.  (The governor's wedged-dispatch rung probes
+    this: a fetch stuck behind a wedged device counts as wedged too.)
+
+    Thread mode never probes the device array: the resolver event being
+    set means ``fits_host``/``error`` are already published, and the
+    array's ``is_ready`` notification can go missing outright when a
+    blocking transfer runs concurrently on another thread (observed on
+    the CPU backend) — gating on it would stall resolution behind a
+    phantom in-flight signal.  ``_ready`` still runs over the published
+    value so the crash machine's forced-in-flight override keeps
+    simulating a wedge."""
+    ev = p.launched
+    if ev is not None:
+        return ev.is_set() and _ready(p.fits_host)
+    return _ready(p.fits)
+
+
+def _fits_host_pending(p: "_Pending") -> bool:
+    """Host fold of a pending's fit row out of the batch's stacked fits
+    vector: ``fits_host`` if the dispatch-time fallback fetch ran, else a
+    host memory read of row ``fits_index`` (per-shard columns AND-fold on
+    the host — no device program, no collective)."""
+    if p.fits_host is not None:
+        return bool(p.fits_host)
+    arr = np.asarray(p.fits)
+    return workqueue.fold_fits_host(arr[p.fits_index] if arr.ndim else arr)
+
+
+class _Dispatcher:
+    """Dedicated resolver thread for overlapped Algorithm-1 dispatches.
+
+    A plain FIFO worker: jobs (device->host fit fetch + fold closures
+    over already-dispatched batches) run in submission order, so
+    per-batch resolution order is preserved and the foreground tick
+    never blocks on device execution or a host round trip.  ``stop``
+    drains the queue (sentinel goes in behind any queued jobs) and
+    joins — a clean shutdown can never drop a fetch.
+    """
+
+    def __init__(self):
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self.thread = threading.Thread(
+            target=self._run, name="repro-dispatch", daemon=True)
+        self.thread.start()
+
+    def _run(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            job()
+
+    def submit(self, job: Callable[[], None]) -> None:
+        self._q.put(job)
+
+    def stop(self) -> None:
+        if self.thread.is_alive():
+            self._q.put(None)
+            self.thread.join()
 
 
 @dataclasses.dataclass
@@ -365,9 +467,13 @@ class ProtectedStore:
             factor=self.policy.straggler_factor,
             window=self.policy.straggler_window,
             recovery_steps=self.policy.straggler_recovery_steps)
-        self._jit_update: Dict[Tuple[str, str], Any] = {}
+        self._jit_update: Dict[Tuple[Any, Any], Any] = {}
         self._jit_scrub: Dict[str, Any] = {}
-        self._jit_misc: Dict[Tuple[str, str], Any] = {}
+        self._jit_misc: Dict[Tuple[Any, str], Any] = {}
+        # Off-thread dispatcher (RedundancyPolicy.dispatcher_thread):
+        # created lazily at the first overlapped dispatch, shut down by
+        # flush and at a remesh handover.
+        self._dispatcher: Optional[_Dispatcher] = None
         # Scrub patroller (repro.scrub) — built by attach() when the policy
         # enables it (patrol_bytes_per_tick > 0) and a vilamb group exists.
         self.patroller: Optional[Any] = None
@@ -395,10 +501,15 @@ class ProtectedStore:
         """Register ``fn(phase, info)`` to fire at lifecycle phases.
 
         Phases (see ``repro.faults.crashpoints.CRASH_PHASES``): ``on_write``,
-        ``dispatch`` (speculative overlapped launch), ``coalesce`` (due tick
-        folded into the in-flight update), ``adopt`` / ``adopt_forced``
-        (lazy vs deadline/scrub-forced resolution), ``blocking_update``,
-        ``scrub``, ``tick``, ``flush``, ``settle``.  ``info['red']`` is the
+        ``dispatcher_enqueue`` (the tick is about to dispatch the batched
+        multi-group program and hand its fit fetch to the resolver
+        thread), ``dispatch`` (per-group, right after the overlapped
+        batch was dispatched and the epoch-swapped live view adopted),
+        ``coalesce`` (due tick folded into the in-flight update),
+        ``dispatcher_join`` (about to block on the resolver thread's
+        fetched fit signal), ``adopt`` / ``adopt_forced`` (lazy vs
+        deadline/scrub-forced resolution), ``blocking_update``, ``scrub``,
+        ``tick``, ``flush``, ``settle``.  ``info['red']`` is the
         live redundancy view at that instant — the state a crash would
         persist.  Hooks are host-level: they never fire while tracing, so
         an ``on_write`` embedded in a jitted step is silently skipped.
@@ -472,6 +583,7 @@ class ProtectedStore:
         self._jit_update = {}
         self._jit_scrub = {}
         self._jit_misc = {}
+        self._stop_dispatcher()
         if self.policy.precompile:
             self.warmup()
         self.patroller = None
@@ -659,9 +771,10 @@ class ProtectedStore:
     def _async_group(self, g: _Group) -> bool:
         """Does this group take the overlap-pipelined tick path?
 
-        Mesh-sharded groups qualify too: the per-shard fit flags are
-        AND-folded on device and fetched one tick ahead, exactly like the
-        machine-local scalar.
+        Mesh-sharded groups qualify too: their per-shard fit flags ride
+        the batched program's stacked fits vector, whose host copy starts
+        at launch time — the AND-fold over shards is a host memory read
+        at resolution, exactly like the machine-local scalar.
         """
         return (g.engine is not None and g.policy.mode == "vilamb"
                 and self.policy.async_tick and self.policy.pipeline_depth > 0)
@@ -695,6 +808,52 @@ class ProtectedStore:
         fn = self._jit_update.get(key)
         if fn is None:
             fn = self._jit_update[key] = self._build_update(label, variant)
+        return fn
+
+    def _build_update_many(self, labels: Tuple[str, ...],
+                           variants: Tuple[str, ...]):
+        """One jitted program running every due group's overlap Algorithm-1
+        pass and stacking the fit signals into a single vector.
+
+        This is the tentpole of the sharded-overlap fix: a due tick used to
+        launch one update program *plus* one AND-fold program per group —
+        each launch serializing a full per-device dispatch on the host.
+        Batched, the tick costs one launch total, and the fits come back as
+        one stacked ``(n_groups,)`` vector (``(n_groups, n_devices)`` under
+        a mesh — pinned to per-device columns so the program still lowers
+        collective-free; the AND-fold over shards happens on the host at
+        resolution, where the row is already fetched memory).
+        """
+        engines = [self.groups[l].engine for l in labels]
+        qs = [v == "async_queued" for v in variants]
+        mesh = engines[0].mesh
+
+        def many(subs, reds):
+            outs, fits = [], []
+            for eng, q, sub, rd in zip(engines, qs, subs, reds):
+                o, f = eng.redundancy_step_async(sub, rd, queued=q)
+                outs.append(o)
+                fits.append(f)
+            stacked = jnp.stack(fits)
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                # Per-shard flag columns stay device-local: each device
+                # holds its own column of every group's row — stacking is
+                # a local concat, never a collective.
+                stacked = jax.lax.with_sharding_constraint(
+                    stacked,
+                    NamedSharding(mesh, P(None, tuple(mesh.axis_names))))
+            return tuple(outs), stacked
+
+        return jax.jit(many)
+
+    def _update_many_fn(self, labels: Tuple[str, ...],
+                        variants: Tuple[str, ...]):
+        key = (tuple(labels), tuple(variants))
+        fn = self._jit_update.get(key)
+        if fn is None:
+            fn = self._jit_update[key] = self._build_update_many(
+                key[0], key[1])
         return fn
 
     def warmup(self) -> "ProtectedStore":
@@ -752,6 +911,20 @@ class ProtectedStore:
                 self._jit_update[key] = self._build_update(
                     g.label, variant).lower(leaf_structs, red_structs).compile()
             if self._async_group(g):
+                # The tick launches through the batched multi-group program
+                # (a singleton batch when one group is due); AOT-lower both
+                # speculative variants of it too, so the first overlapped
+                # dispatch never hides a compile stall on the dispatcher
+                # thread.
+                for variant in ("async_full", "async_queued"):
+                    if "queued" in variant and not eng.has_queue:
+                        continue
+                    mkey = ((g.label,), (variant,))
+                    if mkey in self._jit_update:
+                        continue
+                    self._jit_update[mkey] = self._build_update_many(
+                        mkey[0], mkey[1]).lower(
+                        (leaf_structs,), (red_structs,)).compile()
                 # Warm the epoch-swap helper too (it compiles on first use
                 # otherwise — a ~50 ms stall inside the first overlapped
                 # dispatch).  A real call on the tiny bitvectors both
@@ -767,13 +940,6 @@ class ProtectedStore:
                                        * eng.shard_factor(n),), jnp.uint32),
                             shardings[n].dirty)
                         for n in g.names}
-                    # ...and the per-shard fit-flag AND-fold.
-                    ndev = int(np.prod(list(eng.mesh.shape.values())))
-                    flags = jax.device_put(
-                        jnp.ones((ndev,), bool),
-                        NamedSharding(eng.mesh,
-                                      P(tuple(eng.mesh.axis_names))))
-                    jax.block_until_ready(self._fits_all_fn(g.label)(flags))
                 jax.block_until_ready(self._swap_fn(g.label)(words, words))
         return self
 
@@ -820,66 +986,178 @@ class ProtectedStore:
             fn = self._jit_misc[key] = jax.jit(swap, **kw)
         return fn
 
-    def _fits_all_fn(self, label: str):
-        """Tiny jitted AND-fold of a mesh group's per-shard fit flags into
-        the single device-side "all shards fit" scalar.
+    def _swap_many_fn(self, labels: Tuple[str, ...]):
+        """Epoch swap for a whole dispatch batch in one program.
 
-        Kept out of the Algorithm-1 program on purpose: folding a
-        cross-shard predicate needs a (one-bool) collective, and the update
-        programs must lower collective-free.  Dispatched asynchronously —
-        the scalar is then fetched exactly like the machine-local one.
+        A singleton batch delegates to the per-group :meth:`_swap_fn` (so
+        its warmed ``(label, "swap")`` cache entry keeps serving the
+        common case); a multi-group batch compiles one fused program —
+        returns a tuple over groups of ``(snaps, fresh)``.
         """
-        key = (label, "fits_all")
+        if len(labels) == 1:
+            base = self._swap_fn(labels[0])
+            return lambda dirties, shadows: (base(dirties[0], shadows[0]),)
+        key = (tuple(labels), "swap_many")
         fn = self._jit_misc.get(key)
         if fn is None:
-            fn = self._jit_misc[key] = jax.jit(jnp.all)
+            groups = [self.groups[l] for l in labels]
+
+            def swap_many(dirties, shadows):
+                return tuple(
+                    ({n: jnp.bitwise_or(d[n], s[n]) for n in g.names},
+                     {n: jnp.zeros_like(d[n]) for n in g.names})
+                    for g, d, s in zip(groups, dirties, shadows))
+
+            kw = {}
+            if groups[0].engine is not None and groups[0].engine.mesh is not None:
+                shs = tuple(
+                    ({n: g.engine.red_shardings()[n].dirty for n in g.names},
+                     {n: g.engine.red_shardings()[n].dirty for n in g.names})
+                    for g in groups)
+                kw["out_shardings"] = shs
+            fn = self._jit_misc[key] = jax.jit(swap_many, **kw)
         return fn
 
-    def _dispatch_async(self, g: _Group, sub, red_sub, step: int, *,
-                        queued: bool) -> Dict[str, LeafRedundancy]:
-        """Overlapped dispatch: costs the foreground only enqueues.
+    def _submit(self, job: Callable[[], None]) -> None:
+        """Run ``job`` on the dispatcher thread (lazily created), or inline
+        when ``RedundancyPolicy.dispatcher_thread`` is off."""
+        if not self.policy.dispatcher_thread:
+            job()
+            return
+        d = self._dispatcher
+        if d is None or not d.thread.is_alive():
+            d = self._dispatcher = _Dispatcher()
+        d.submit(job)
 
-        Launches the speculative queued-or-full program and starts the
-        non-blocking host copy of its ``fits`` scalar.  Nothing is donated
-        and nothing waits: the returned **live view** carries the old
-        epoch's checksums/parity (kept alive as the double buffer), a
-        fresh zero epoch-B dirty bitmap for the foreground's next
-        ``on_write``, and ``shadow`` = snapshot A — so scrub, recovery,
-        accounting, and a crash-persisted checkpoint all keep treating the
-        in-flight blocks as vulnerable until resolution adopts the result.
-        The foreground's next step depends only on already-defined arrays,
-        so it dispatches without ever waiting on the update (the paper's
-        dirty-bitmap swap, epoch A consumed while epoch B records).
+    def _stop_dispatcher(self) -> None:
+        """Drain + join the dispatcher thread (flush / remesh handover).
+        Queued fetches complete first, so no pending is ever dropped."""
+        d, self._dispatcher = self._dispatcher, None
+        if d is not None:
+            d.stop()
+
+    def sync_inflight(self) -> "ProtectedStore":
+        """Wait until every pending's resolver job has run and its fit
+        signal is device-complete (test/replay determinism hook — the
+        crash machine and the sharded drivers use it to force 'adopt,
+        never coalesce' schedules independent of machine load)."""
+        for g in self._protected():
+            p = g.pending
+            if p is None:
+                continue
+            if p.launched is not None:
+                p.launched.wait()
+            if p.error is None and p.fits is not None:
+                jax.block_until_ready(p.fits)
+        return self
+
+    def _dispatch_async_many(self,
+                             items: List[Tuple[_Group, bool, int, float]],
+                             get_leaves, out: Dict[str, Any], step: int
+                             ) -> Dict[str, LeafRedundancy]:
+        """Overlapped batched dispatch with an off-thread resolver.
+
+        Every due group's speculative queued-or-full program runs as ONE
+        jitted multi-group launch with a single stacked fits vector —
+        collapsing the per-group dispatch overhead (the dominant
+        per-due-tick host cost on a sharded store) into one program
+        launch.  The device->host fit fetch + AND-fold then runs on the
+        dispatcher thread, so the tick never touches the device again
+        for this batch.  Nothing is donated and nothing waits on
+        execution: the returned **live view**
+        carries the old epoch's checksums/parity (kept alive as the double
+        buffer), a fresh zero epoch-B dirty bitmap for the foreground's
+        next ``on_write``, and ``shadow`` = snapshot A — so scrub,
+        recovery, accounting, and a crash-persisted checkpoint all keep
+        treating the in-flight blocks as vulnerable until resolution
+        adopts the result.  The host copy of the fits vector is owned by
+        the resolver job (inline mode: ``copy_to_host_async`` at dispatch
+        time, with an eager fallback fetch when the backend lacks it), so
+        ``_resolve`` never pays a synchronous device round trip.
         """
-        variant = "async_queued" if queued else "async_full"
-        snaps, fresh = self._swap_fn(g.label)(
-            {n: red_sub[n].dirty for n in g.names},
-            {n: red_sub[n].shadow for n in g.names})
-        out_red, fits = self._update_fn(g.label, variant)(sub, red_sub)
-        if g.engine.mesh is not None:
-            # Per-shard flags -> one device-side scalar (separate tiny
-            # program; the update itself lowers collective-free).
-            fits = self._fits_all_fn(g.label)(fits)
-        if hasattr(fits, "copy_to_host_async"):
+        labels = tuple(g.label for g, *_ in items)
+        variants = tuple("async_queued" if q else "async_full"
+                         for _, q, *_ in items)
+        lv = get_leaves()
+        subs = tuple({n: lv[n] for n in g.names} for g, *_ in items)
+        red_subs = tuple({n: out[n] for n in g.names} for g, *_ in items)
+        swaps = self._swap_many_fn(labels)(
+            tuple({n: rs[n].dirty for n in rs} for rs in red_subs),
+            tuple({n: rs[n].shadow for n in rs} for rs in red_subs))
+        # The batched program is dispatched HERE, on the tick thread: jax's
+        # dispatch is asynchronous (nothing below blocks on execution), and
+        # dispatching before returning is what makes a caller's later
+        # donation of the captured leaf/red buffers safe — the runtime
+        # already holds usage references.  Handing the *dispatch* to the
+        # thread was measured and rejected: a donating caller (train step,
+        # decode step) deletes the captured buffers before the thread gets
+        # to shard them.
+        outs, fits = self._update_many_fn(labels, variants)(subs, red_subs)
+        ev = threading.Event() if self.policy.dispatcher_thread else None
+        pendings = []
+        for i, (g, queued, prev_step, prev_time) in enumerate(items):
+            # prev_* carry the freshness clocks as they stood when the
+            # tick collected this group — before the tick bumped them:
+            # the governor's wedged-dispatch abandon rolls back to these.
+            # dispatched_at stamps the handoff — a fetch stuck behind a
+            # wedged device counts as wedged from the moment the
+            # foreground handed it off.
+            p = _Pending(red=outs[i], fits=fits, queued=queued, step=step,
+                         launched=ev, fits_index=i,
+                         prev_step=prev_step, prev_time=prev_time)
+            g.pending = p
+            pendings.append(p)
+
+        if ev is not None:
+            # Off-thread resolver: the dedicated thread rides out device
+            # execution (np.asarray blocks *it*, not the tick) and
+            # publishes the folded per-group fit bits; ``_resolve`` then
+            # only reads plain Python bools.
+            def resolve_job(fits=fits, pendings=pendings, ev=ev):
+                try:
+                    host = np.asarray(fits)
+                    for i, p in enumerate(pendings):
+                        p.fits_host = workqueue.fold_fits_host(
+                            host[i] if host.ndim else host)
+                except BaseException as e:   # surfaces at resolution
+                    for p in pendings:
+                        p.error = e
+                finally:
+                    ev.set()
+
+            self._submit(resolve_job)
+        elif hasattr(fits, "copy_to_host_async"):
+            # Inline mode (PR3..PR8 behavior): start the non-blocking
+            # device->host copy now; resolution folds the landed row.
             fits.copy_to_host_async()
-        # prev_* snapshot the freshness clocks as they stand now (the tick
-        # bumps them only after dispatch): the governor's wedged-dispatch
-        # abandon rolls back to these.
-        g.pending = _Pending(red=out_red, fits=fits, queued=queued, step=step,
-                             prev_step=g.last_update_step,
-                             prev_time=g.last_update_time)
-        return {n: dataclasses.replace(
-                    red_sub[n], dirty=fresh[n], shadow=snaps[n])
-                for n in g.names}
+        else:
+            # Backend without a non-blocking device->host copy: fetch
+            # HERE, at dispatch time — the resolve-side read must stay a
+            # host memory read, never a synchronous round trip.
+            host = np.asarray(fits)
+            for i, p in enumerate(pendings):
+                p.fits_host = workqueue.fold_fits_host(
+                    host[i] if host.ndim else host)
+        view: Dict[str, LeafRedundancy] = {}
+        for (g, *_), (snaps, fresh), rs in zip(items, swaps, red_subs):
+            view.update({n: dataclasses.replace(
+                            rs[n], dirty=fresh[n], shadow=snaps[n])
+                         for n in g.names})
+        return view
 
     def _resolve(self, g: _Group, red_sub, *, wait: bool):
         """Adopt an in-flight update into the live view, if resolvable.
 
         Returns ``(red_sub', overflowed, deferred)``; ``(None, False, 0)``
-        when the update is still in flight and ``wait`` is False.  Reading
-        ``fits`` here is a host memory read, not a device sync: the async
-        copy was issued at dispatch, one tick (or more) ago — ``wait``
-        blocks only when a deadline or scrub forces settled state.
+        when the update is still in flight (resolver thread still waiting
+        on the device, or the device still computing) and ``wait`` is
+        False.  Reading the fit row here is a host memory read, not a
+        device sync: the resolver thread folded the batch's stacked fits
+        vector to plain bools (inline mode: the non-blocking host copy
+        started at dispatch time), one tick (or more) ago — ``wait``
+        blocks (joins the resolver, which implies the signal landed) only
+        when a deadline, scrub, or the governor forces settled state.  A
+        dispatch or fetch that threw re-raises here.
         Adoption takes the program's checksums/parity/meta plus its
         ``shadow = overflowed ? snapshot : 0`` select — so a mispredicted
         queued dispatch (``overflowed``) keeps epoch A conservatively
@@ -892,9 +1170,14 @@ class ProtectedStore:
         p = g.pending
         if p is None:
             return red_sub, False, 0
-        if not wait and not _ready(p.fits):
+        if not wait and not _pending_ready(p):
             return None, False, 0
-        fits = _fits_host(p.fits)
+        if p.launched is not None:
+            p.launched.wait()            # join: no-op unless wait forced it
+        if p.error is not None:
+            g.pending = None
+            raise p.error
+        fits = _fits_host_pending(p)
         g.predicted_fits = fits
         out = {n: dataclasses.replace(p.red[n], dirty=red_sub[n].dirty)
                for n in g.names}
@@ -913,11 +1196,18 @@ class ProtectedStore:
         leaves are also stashed for :meth:`take_repaired` — the caller of
         settle/flush must adopt them (the store cannot mutate caller
         arrays)."""
+        # ``step`` stays Optional all the way down: "caller did not supply
+        # a step" is a distinct state from "step 0" (right after attach),
+        # and the crash-phase hooks fill in the machine's true current
+        # step only when the kwarg is absent — coercing None to 0 here
+        # used to stamp rebuild/remesh phases and reports with a bogus
+        # step 0.
+        step_i = 0 if step is None else int(step)
         pat = self.patroller
         if pat is not None and pat.rebuild is not None:
-            rep = TickReport(step=int(step or 0))
+            rep = TickReport(step=step_i)
             while pat.rebuild is not None:
-                pat.rebuild.step_once(leaves, out, rep, int(step or 0))
+                pat.rebuild.step_once(leaves, out, rep, step)
                 if pat.rebuild.status.done:
                     recs = pat.rebuild.unrecoverable()
                     pat.unrecoverable.extend(recs)
@@ -925,9 +1215,9 @@ class ProtectedStore:
             leaves.update(rep.repaired)
             self._drained.update(rep.repaired)
         if self._remesh is not None:
-            rep = TickReport(step=int(step or 0))
+            rep = TickReport(step=step_i)
             while self._remesh is not None:
-                self._remesh_step(leaves, out, rep, int(step or 0))
+                self._remesh_step(leaves, out, rep, step)
             leaves.update(rep.repaired)
             self._drained.update(rep.repaired)
         return leaves
@@ -941,8 +1231,8 @@ class ProtectedStore:
         return out
 
     def settle(self, red: RedundancyState,
-               leaves: Optional[Mapping[str, jax.Array]] = None
-               ) -> RedundancyState:
+               leaves: Optional[Mapping[str, jax.Array]] = None,
+               step: Optional[int] = None) -> RedundancyState:
         """Adopt every in-flight async update into ``red`` (blocking).
 
         No new periodic pass is scheduled (that is ``flush``).  With
@@ -953,14 +1243,23 @@ class ProtectedStore:
         update is repaired immediately with the full-recompute fallback;
         without them, its blocks simply stay marked (shadow) for the next
         pass — conservative either way.  Ticks coalesced behind the
-        in-flight update fold into the next due tick.
+        in-flight update fold into the next due tick.  Pass ``step`` when
+        known (it may legitimately be 0): background drain windows stamp
+        their reports/phases with it — ``None`` means "unknown", never
+        step 0.  Joins the dispatcher for every pending (launch, then fit
+        signal) — the ``dispatcher_join`` crash phase fires per joined
+        group.
         """
         out = dict(red)
         if leaves is not None:
-            leaves = self._drain_background(dict(leaves), out)
+            leaves = self._drain_background(dict(leaves), out, step=step)
         for g in self._protected():
             if g.pending is None:
                 continue
+            if self._phase_hooks:
+                info = {} if step is None else {"step": int(step)}
+                self._phase("dispatcher_join", red=dict(out), group=g.label,
+                            **info)
             red_sub, overflowed, _ = self._resolve(
                 g, {n: out[n] for n in g.names}, wait=True)
             out.update(red_sub)
@@ -1032,9 +1331,14 @@ class ProtectedStore:
         report = TickReport(step=step)
         out = dict(red)
         updated, deadline, scrubbed, coalesced, overflowed = [], [], [], [], []
-        # One clock read and one leaf materialization serve the whole tick;
-        # each group's leaf sub-dict is built at most once even when both its
-        # update and its scrub fire on the same step.
+        # Batched dispatch: the group loop only *decides* (resolve/coalesce/
+        # bookkeeping); every group due for an overlapped dispatch lands in
+        # to_dispatch and launches as ONE multi-group program after the
+        # loop.  Scrubs run last (scrub_groups) so they see the
+        # post-dispatch live view exactly as the per-group loop did.
+        to_dispatch: List[Tuple[_Group, bool, int, float]] = []
+        scrub_groups: List[_Group] = []
+        # One clock read and one leaf materialization serve the whole tick.
         now = time.monotonic()
         materialized: Optional[Mapping[str, jax.Array]] = (
             None if callable(leaves) else leaves)
@@ -1044,6 +1348,10 @@ class ProtectedStore:
             if materialized is None:
                 materialized = leaves()
             return materialized
+
+        def sub_of(g):
+            lv = get_leaves()
+            return {n: lv[n] for n in g.names}
 
         hg = self._health
         if hg is not None:
@@ -1056,15 +1364,6 @@ class ProtectedStore:
         # race the migration for no benefit.
         for g in (() if self._remesh is not None else self._protected()):
             lp = g.policy
-            sub: Optional[Dict[str, jax.Array]] = None
-
-            def group_leaves(g=g):
-                nonlocal sub
-                if sub is None:
-                    lv = get_leaves()
-                    sub = {n: lv[n] for n in g.names}
-                return sub
-
             if step < g.last_update_step:
                 # The step counter restarted (new serve wave / fresh run on a
                 # long-lived store): rebase so deadlines keep their meaning.
@@ -1099,9 +1398,14 @@ class ProtectedStore:
                     # Rung 2: within the governor's deadline margin the tick
                     # stops speculating — resolve blocking and re-dispatch,
                     # meeting the deadline early instead of missing it.
+                    forced = overdue or scrub_due or margin
+                    if had_pending and forced and self._phase_hooks:
+                        # The crash point right before the tick joins the
+                        # dispatcher (launch, then fit signal).
+                        self._phase("dispatcher_join", red=dict(out),
+                                    group=g.label, step=step)
                     res, ovf, deferred = self._resolve(
-                        g, {n: out[n] for n in g.names},
-                        wait=overdue or scrub_due or margin)
+                        g, {n: out[n] for n in g.names}, wait=forced)
                     if res is None:
                         # Still in flight: fold this due tick into it.  The
                         # deadline clock keeps running, so a wedged device
@@ -1117,8 +1421,7 @@ class ProtectedStore:
                         out.update(res)
                         if had_pending and self._phase_hooks:
                             self._phase(
-                                "adopt_forced" if (overdue or scrub_due
-                                                   or margin)
+                                "adopt_forced" if forced
                                 else "adopt", red=dict(out), group=g.label,
                                 step=step, overflowed=ovf)
                         if (had_pending and margin
@@ -1132,17 +1435,16 @@ class ProtectedStore:
                             # program now.
                             overflowed.append(g.label)
                         if ovf or due or overdue or deferred or margin or retry:
-                            out.update(self._dispatch_async(
-                                g, group_leaves(),
-                                {n: out[n] for n in g.names}, step,
-                                queued=(not ovf and g.engine.has_queue
-                                        and g.predicted_fits)))
+                            # Snapshot the freshness clocks *before* the
+                            # bump below: the governor's wedged-dispatch
+                            # abandon rolls back to these, and the batched
+                            # dispatch only runs after this loop.
+                            to_dispatch.append(
+                                (g, bool(not ovf and g.engine.has_queue
+                                         and g.predicted_fits),
+                                 g.last_update_step, g.last_update_time))
                             g.last_update_step = step
                             g.last_update_time = now
-                            if self._phase_hooks:
-                                self._phase("dispatch", red=dict(out),
-                                            group=g.label, step=step,
-                                            queued=g.pending.queued)
                             if due or overdue or margin:
                                 updated.append(g.label)
                             if overdue and not due:
@@ -1153,11 +1455,14 @@ class ProtectedStore:
                         # (e.g. escalation via a reported violation): adopt
                         # it first — a stale pending resolved *after* the
                         # blocking pass would clobber newer checksums.
+                        if self._phase_hooks:
+                            self._phase("dispatcher_join", red=dict(out),
+                                        group=g.label, step=step)
                         red_sub, _, _ = self._resolve(
                             g, {n: out[n] for n in g.names}, wait=True)
                         out.update(red_sub)
                     out.update(self._dispatch_blocking(
-                        g, group_leaves(), {n: out[n] for n in g.names}))
+                        g, sub_of(g), {n: out[n] for n in g.names}))
                     g.last_update_step = step
                     g.last_update_time = now
                     updated.append(g.label)
@@ -1167,13 +1472,29 @@ class ProtectedStore:
                     if overdue and not due:
                         deadline.append(g.label)
             if scrub_due:
-                mm, alarms = self._scrub_group(g, group_leaves(), out)
-                scrubbed.append(g.label)
-                report.mismatches += mm
-                report.alarms += alarms
-                if self._phase_hooks:
-                    self._phase("scrub", red=dict(out), group=g.label,
-                                step=step, mismatches=mm)
+                scrub_groups.append(g)
+        if to_dispatch:
+            # The tentpole: every due group launches in ONE batched
+            # multi-group program with one stacked fits vector, its fit
+            # fetch handed to the resolver thread — the foreground's cost
+            # is the epoch swap plus one asynchronous dispatch.
+            if self._phase_hooks:
+                self._phase("dispatcher_enqueue", red=dict(out), step=step,
+                            groups=tuple(g.label for g, *_ in to_dispatch))
+            out.update(self._dispatch_async_many(
+                to_dispatch, get_leaves, out, step))
+            if self._phase_hooks:
+                for g, *_ in to_dispatch:
+                    self._phase("dispatch", red=dict(out), group=g.label,
+                                step=step, queued=g.pending.queued)
+        for g in scrub_groups:
+            mm, alarms = self._scrub_group(g, sub_of(g), out)
+            scrubbed.append(g.label)
+            report.mismatches += mm
+            report.alarms += alarms
+            if self._phase_hooks:
+                self._phase("scrub", red=dict(out), group=g.label,
+                            step=step, mismatches=mm)
         report.updated = tuple(updated)
         report.deadline_fired = tuple(deadline)
         report.scrubbed = tuple(scrubbed)
@@ -1271,6 +1592,10 @@ class ProtectedStore:
                     # Eager resolution; an overflowed speculative dispatch
                     # left its blocks marked (shadow), so the forced pass
                     # below covers them.
+                    if self._phase_hooks:
+                        info = {} if step is None else {"step": int(step)}
+                        self._phase("dispatcher_join", red=dict(out),
+                                    group=g.label, **info)
                     red_sub, _, _ = self._resolve(
                         g, {n: out[n] for n in g.names}, wait=True)
                     out.update(red_sub)
@@ -1280,8 +1605,15 @@ class ProtectedStore:
                 g.last_update_time = now
                 if step is not None:
                     g.last_update_step = int(step)
+        # Quiescent point: every pending is resolved, so the dispatcher
+        # thread has nothing left to do — shut it down cleanly (the
+        # battery/preemption flush is exactly where a lingering thread
+        # would outlive the process's useful life).  It is re-created
+        # lazily on the next overlapped dispatch.
+        self._stop_dispatcher()
         if self._phase_hooks:
-            self._phase("flush", red=dict(out), step=step)
+            self._phase("flush", red=dict(out),
+                        **({} if step is None else {"step": int(step)}))
         return out
 
     # --------------------------------------------------------- elastic remesh
@@ -1333,6 +1665,9 @@ class ProtectedStore:
         for g in self._protected():
             if g.pending is None:
                 continue
+            if self._phase_hooks:
+                self._phase("dispatcher_join", red=dict(out), group=g.label,
+                            step=step)
             red_sub, ovf, _ = self._resolve(
                 g, {n: out[n] for n in g.names}, wait=True)
             out.update(red_sub)
@@ -1342,12 +1677,16 @@ class ProtectedStore:
                     {n: out[n] for n in g.names})
                 g.predicted_fits = _fits_host(fits)
                 out.update(repaired)
+        # The migration swaps engines and jit caches at adoption; the old
+        # geometry's dispatcher (and any compiled programs its queued jobs
+        # closed over) must not leak across the handover.
+        self._stop_dispatcher()
         self._remesh = RemeshMigrator(self, new_mesh, new_specs,
                                       leaves, out, step)
         report.repaired.update(self._remesh.moved)
         report.remesh = self._remesh.status
 
-    def _remesh_step(self, leaves, out, report, step: int) -> None:
+    def _remesh_step(self, leaves, out, report, step: Optional[int]) -> None:
         """One bounded migration window; adopts the new geometry (red swap,
         group/engine swap, fresh patroller, ``geometry_version`` bump) on
         the tick the last window completes."""

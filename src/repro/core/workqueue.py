@@ -31,7 +31,8 @@ Everything here is shard-oblivious on purpose: under a mesh the engine
 calls these helpers *inside* ``shard_map``, so each shard compacts its own
 queue over its local stripes (capacity derived from the local stripe
 count) and :func:`stripe_fits` becomes the shard-local flag the overlap
-pipeline AND-folds across shards (see ``engine.redundancy_step_async``).
+pipeline AND-folds across shards — on the host, after the batched fetch
+(:func:`fold_fits_host`; see ``engine.redundancy_step_async``).
 """
 from __future__ import annotations
 
@@ -40,6 +41,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import checksum
 
@@ -100,6 +102,20 @@ def stripe_fits(stripe_dirty: jax.Array, capacity: int) -> jax.Array:
     never pays a device->host round trip (see ``redundancy_step_async``).
     """
     return stripe_dirty_count(stripe_dirty) <= capacity
+
+
+def fold_fits_host(fits_row) -> bool:
+    """Host-side AND-fold of one group's fetched fit signal.
+
+    ``fits_row`` is either the machine-local scalar or the per-shard flag
+    row out of the store's batched ``(n_groups, n_devices)`` fits vector.
+    The fold happens here, on already-fetched host memory — never as a
+    device program: a cross-shard AND would be the one collective in an
+    otherwise collective-free redundancy pipeline, and a dedicated fold
+    launch per group was exactly the per-tick dispatch overhead the
+    batched path removes.
+    """
+    return bool(np.asarray(fits_row).all())
 
 
 def queued_update(

@@ -45,10 +45,13 @@ from .crashpoints import CrashPlan, CrashPointMachine
 from .inject import FaultInjector, FaultSpec
 from .oracle import check_detection, vulnerability_window
 
-# The PR3 pipeline phases a sweep must prove crash-safe (acceptance
+# The pipeline phases a sweep must prove crash-safe (acceptance
 # criterion: speculative dispatch, mid-flight, lazy adoption, forced
-# resolve — plus the classic flush/scrub/write points).
+# resolve — plus the classic flush/scrub/write points).  PR10 adds the
+# off-thread dispatcher edges: the batch enqueue before the launch thread
+# runs, and the join barrier right before a forced resolve.
 REQUIRED_PHASES = ("dispatch", "coalesce", "adopt", "adopt_forced",
+                   "dispatcher_enqueue", "dispatcher_join",
                    "on_write", "tick", "flush")
 
 
@@ -182,8 +185,11 @@ def patrol_pass(seed: int, steps: int) -> int:
     store.patroller.expect_injection("w", blk, step)
     # Latency bound: round-robin over both leaves, probe processed one
     # tick after dispatch -> ~2 ticks per window, plus repair pacing.
+    # Probes only dispatch on quiet ticks and a probe result may take an
+    # extra tick to land, so the exact latency jitters with dispatch/
+    # resolver timing — budget two full sweeps plus slack, not one.
     nb = sum(store.protected_metas[n].n_blocks for n in ("w", "e"))
-    budget = 2 * (nb // 8 + 2) + 8
+    budget = 4 * (nb // 8 + 2) + 16
     detected = repaired = False
     for _ in range(budget):
         red, rep = store.tick(leaves, red, step, scrub_period=0)
@@ -199,11 +205,16 @@ def patrol_pass(seed: int, steps: int) -> int:
     bitwise = all(np.array_equal(np.asarray(leaves[n]).view(np.uint8),
                                  expected[n].view(np.uint8))
                   for n in expected)
-    lat = store.patroller.latency_stats(step_seconds=1.0)
+    pat = store.patroller
+    lat = pat.latency_stats(step_seconds=1.0)
     ok = detected and repaired and clean and bitwise
+    diag = ("" if ok else
+            f" [budget={budget} starved={pat.starved_ticks} "
+            f"sweeps={dict(pat.sweeps)} scanned={pat.blocks_scanned} "
+            f"probe_out={pat._probe is not None}]")
     print(f"  patrol seed={seed}: detected={detected} (latency "
           f"{lat['mean_s']:.0f} ticks) repaired={repaired} clean={clean} "
-          f"bitwise={bitwise} {'OK' if ok else 'FAIL'}")
+          f"bitwise={bitwise} {'OK' if ok else 'FAIL'}{diag}")
     return 0 if ok else 1
 
 
@@ -261,7 +272,8 @@ def sharded_child(seed: int, steps: int) -> int:
             scrub_every=5, hold_inflight_steps=(3, 4))
         fired = machine.enumerate_phases()
         plans = []
-        for ph in ("dispatch", "coalesce", "adopt", "adopt_forced", "flush"):
+        for ph in ("dispatch", "coalesce", "adopt", "adopt_forced",
+                   "dispatcher_enqueue", "dispatcher_join", "flush"):
             occ = [o for p, o in fired if p == ph]
             if occ:
                 plans.append(CrashPlan(ph, occ[-1]))

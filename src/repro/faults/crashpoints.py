@@ -46,13 +46,18 @@ from .oracle import vulnerability_window
 # PR3 pipeline stages).  "adopt" = lazy adoption on a later tick;
 # "adopt_forced" = deadline- or scrub-forced blocking resolve;
 # "coalesce" = a due tick folded into the still-in-flight update
-# (mid-flight); "dispatch" = the speculative overlapped launch;
-# "rebuild_paste" = one shard-rebuild paste window landed (PR6);
-# "remesh_migrate" = one remesh migration window re-striped (PR7) — the
-# live red at both is the *old-geometry* authoritative copy, so a crash
-# there restarts on the pre-remesh mesh.
-CRASH_PHASES = ("init", "on_write", "dispatch", "coalesce", "adopt",
-                "adopt_forced", "blocking_update", "scrub", "tick", "flush",
+# (mid-flight); "dispatcher_enqueue" = the batched multi-group launch is
+# about to be handed to the dispatcher thread (pre-epoch-swap live view);
+# "dispatch" = per due group, right after the overlapped launch was
+# enqueued (post-swap live view); "dispatcher_join" = a settle/flush/
+# deadline/remesh path is about to block on the dispatcher (launch, then
+# fit signal); "rebuild_paste" = one shard-rebuild paste window landed
+# (PR6); "remesh_migrate" = one remesh migration window re-striped (PR7)
+# — the live red at both is the *old-geometry* authoritative copy, so a
+# crash there restarts on the pre-remesh mesh.
+CRASH_PHASES = ("init", "on_write", "dispatcher_enqueue", "dispatch",
+                "coalesce", "dispatcher_join", "adopt", "adopt_forced",
+                "blocking_update", "scrub", "tick", "flush",
                 "settle", "rebuild_paste", "remesh_migrate")
 
 
@@ -225,10 +230,9 @@ class CrashPointMachine:
                     # in-flight update as ready, regardless of machine
                     # load — otherwise the adopt-vs-coalesce branch (and
                     # with it the enumerated crash-point list) would
-                    # depend on real async-copy timing.
-                    for g in store.groups.values():
-                        if getattr(g, "pending", None) is not None:
-                            jax.block_until_ready(g.pending.fits)
+                    # depend on dispatcher-thread and async-copy timing.
+                    if hasattr(store, "sync_inflight"):
+                        store.sync_inflight()
                 with self._held_readiness(held):
                     red, rep = store.tick(
                         leaves, red, step,

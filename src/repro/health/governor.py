@@ -299,11 +299,15 @@ class HealthGovernor:
         p = g.pending
         if p is None or hp.dispatch_timeout_s <= 0.0:
             return False
+        # dispatched_at stamps the dispatcher-thread *enqueue* (the new
+        # dispatch site): a launch stuck in the queue behind a wedged
+        # device ages — and abandons — exactly like a launched-but-
+        # unfinished one.
         age = time.monotonic() - p.dispatched_at
         if age < hp.dispatch_timeout_s:
             return False
         from repro.core import store as store_mod   # patched in tests
-        if store_mod._ready(p.fits):
+        if store_mod._pending_ready(p):
             return False                 # slow but done: resolve, don't kill
         gh = self.group(g.label)
         # Roll the freshness clocks back to the oldest unprotected write

@@ -46,7 +46,7 @@ that old view.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Mapping, Tuple
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -248,10 +248,11 @@ class RemeshMigrator:
         self._jits: Dict[Any, Callable] = {}
 
     # ------------------------------------------------------------------ tick
-    def step_once(self, leaves, out, report, step: int) -> None:
+    def step_once(self, leaves, out, report, step: Optional[int]) -> None:
         """Mark + dispatch one bounded window per unfinished leaf; fires
         the ``remesh_migrate`` crash phase with the still-authoritative
-        OLD red view."""
+        OLD red view.  ``step`` is None from a stepless drain; the phase
+        then omits the kwarg so the crash machine's counter fills it."""
         self.status.ticks += 1
         marks: Dict[str, Dict[str, jax.Array]] = {}
         for label, eng in self.new_engines.items():
@@ -284,7 +285,8 @@ class RemeshMigrator:
                for eng in self.new_engines.values() for n in eng.metas):
             self.status.done = True
         report.remesh = self.status
-        self.store._phase("remesh_migrate", red=dict(out), step=step,
+        self.store._phase("remesh_migrate", red=dict(out),
+                          **({} if step is None else {"step": int(step)}),
                           migrated=self.status.migrated,
                           ticks=self.status.ticks)
 

@@ -66,6 +66,14 @@ MAX_REPAIR_ATTEMPTS = 3
 # only ever wants recent-window statistics anyway.
 OBSERVABILITY_CAP = 4096
 
+# A probe outstanding this many process attempts with ``is_ready`` still
+# False is force-fetched: the readiness notification can go missing when
+# the store's resolver thread runs a blocking transfer concurrently
+# (observed on the CPU backend) — the value is long since computed, and
+# waiting on the phantom would starve patrol forever behind the one
+# outstanding probe.
+PROBE_FORCE_TICKS = 4
+
 
 class ShardLossConflictError(RuntimeError):
     """A second shard of the same leaf was declared lost while a rebuild of
@@ -143,6 +151,7 @@ class ScrubPatroller:
         self._jits: Dict[Any, Callable] = {}
         # In-flight async work: at most one probe; one write sample.
         self._probe: Optional[Tuple] = None
+        self._probe_stuck = 0              # not-ready process attempts
         # Rows of the in-flight probe's leaf invalidated by write samples
         # processed since its dispatch: a probe that lands late must not
         # re-validate them (its clean mask predates those writes).
@@ -400,7 +409,14 @@ class ScrubPatroller:
             return
         name, start, w, mism_d, clean_d, xwin_d, _ = self._probe
         if not (_ready(mism_d) and _ready(clean_d)):
-            return      # still in flight; at most one probe outstanding
+            self._probe_stuck += 1
+            if self._probe_stuck < PROBE_FORCE_TICKS:
+                return  # still in flight; at most one probe outstanding
+            # Stuck past any plausible execution time: force the (tiny)
+            # fetch instead of trusting a readiness notification that may
+            # never arrive — see PROBE_FORCE_TICKS.
+            np.asarray(mism_d), np.asarray(clean_d)
+        self._probe_stuck = 0
         self._probe = None
         inval, self._probe_inval = self._probe_inval, None
         if self.rebuild is not None and self.rebuild.name == name:

@@ -95,8 +95,9 @@ def xor_fold(stack):
     sharded axis, and a custom-computation cross-device reduce is
     unsupported on some backends — elementwise XOR of the (static, small)
     ``k`` slices lowers everywhere.  This belongs to the tiny cross-shard
-    host programs (like ``ProtectedStore._fits_all_fn``), deliberately
-    outside the collective-free per-shard rule.
+    host programs, deliberately outside the collective-free per-shard rule
+    (the per-shard fit flags, by contrast, never even need one: the store
+    AND-folds their fetched row on the host).
     """
     out = stack[0]
     for i in range(1, stack.shape[0]):
@@ -193,9 +194,13 @@ class ShardRebuilder:
                                   recon_of)(leaves[name], xp.xpar)
 
     # ------------------------------------------------------------------ tick
-    def step_once(self, leaves, out, report, step: int) -> None:
+    def step_once(self, leaves, out, report, step: Optional[int]) -> None:
         """Paste one bounded window; updates ``out`` (dirty marks) and
-        ``report`` (repaired leaf + status) in place via the patroller."""
+        ``report`` (repaired leaf + status) in place via the patroller.
+
+        ``step`` is None when driven from a stepless drain (``settle()``
+        without a step); the crash phase then omits the kwarg so the
+        crash machine's own step counter fills it in."""
         meta, nb = self.meta, self.meta.n_blocks
         self.status.ticks += 1
         # Per-tick exact freshness fetch: marks through this step are
@@ -240,7 +245,8 @@ class ShardRebuilder:
         if self.cur >= nb:
             self.status.done = True
         report.rebuild = self.status
-        self.pat.store._phase("rebuild_paste", red=dict(out), step=step,
+        self.pat.store._phase("rebuild_paste", red=dict(out),
+                              **({} if step is None else {"step": int(step)}),
                               leaf=self.name, shard=self.shard,
                               window=(int(start), int(start + self.wb)))
 

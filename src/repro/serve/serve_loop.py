@@ -140,8 +140,11 @@ class Server:
             # Adopt any update still in flight from the overlap pipeline so
             # the returned redundancy state is settled for the caller.  The
             # settle also drains active rebuild/remesh windows; adopt any
-            # leaves they repaired or moved.
-            red = self.store.settle(red, flatten_dict(caches))
+            # leaves they repaired or moved.  The last decode tick ran at
+            # step n_tokens - 1, so stamp the drain there (a stepless
+            # settle would leave background status clocks ambiguous).
+            red = self.store.settle(red, flatten_dict(caches),
+                                    step=n_tokens - 1)
             moved = self.store.take_repaired()
             if moved:
                 flat = flatten_dict(caches)

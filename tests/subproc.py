@@ -94,9 +94,9 @@ def drive(store, steps=8, seed=0):
         red = store.on_write(red, events={"w": ev})
         # Determinism: every due tick must see the in-flight update as
         # ready (adopt, never coalesce), independent of machine load.
-        for g in store.groups.values():
-            if getattr(g, "pending", None) is not None:
-                jax.block_until_ready(g.pending.fits)
+        # sync_inflight also joins the dispatcher-thread launch, which a
+        # bare block_until_ready(pending.fits) would race against.
+        store.sync_inflight()
         red, _ = store.tick(lv, red, step)
     return lv, red
 

@@ -130,7 +130,7 @@ def test_speculative_misprediction_is_bitwise_safe():
         if async_on:
             p = _group(store).pending
             assert p is not None and p.queued
-            jax.block_until_ready(p.fits)
+            store.sync_inflight()
             red, rep = store.tick(lv, red, 2)     # resolves -> full fallback
             assert rep.overflowed
             assert _group(store).predicted_fits is False
@@ -201,7 +201,7 @@ def test_coalescing_folds_due_ticks_into_inflight_update(monkeypatch):
     assert rep.coalesced and rep.updated
     assert g.pending is first and first.coalesced == 1
     monkeypatch.undo()
-    jax.block_until_ready(first.fits)
+    store.sync_inflight()
     red, rep = store.tick(lv, red, 3)             # resolves + deferred fires
     assert g.pending is not None and g.pending.step == 3
     red = store.settle(red, lv)

@@ -35,10 +35,12 @@ def test_redundancy_is_machine_local():
 
 def test_sharded_queued_and_async_programs_are_collective_free():
     """Acceptance: the per-shard work-queue and overlap Algorithm-1
-    programs lower with zero collectives on a 2x2x2 mesh, and the async
-    fit flag is the per-shard array (one bool per device, AND-folded in a
-    separate tiny program)."""
+    programs — including the batched multi-group program — lower with
+    zero collectives on a 2x2x2 mesh; the stacked fit vector keeps one
+    bool per device per group and is AND-folded on the host, never in a
+    device program."""
     run_snippet("""
+        from repro.core import workqueue
         from repro.launch.hlo_analysis import assert_no_collectives
         store = mesh_store(async_tick=True, precompile=False)
         g = next(iter(store.groups.values()))
@@ -51,12 +53,15 @@ def test_sharded_queued_and_async_programs_are_collective_free():
         for variant in ("queued", "full", "async_queued", "async_full"):
             lowered = store._build_update(g.label, variant).lower(lv, red)
             assert_no_collectives(lowered, variant)
-        red_out, fits = store._build_update(g.label, "async_queued")(lv, red)
-        assert fits.shape == (8,), fits.shape   # one flag per device
-        assert bool(np.asarray(fits).all())
-        # the AND-fold lives outside the update program, on device
-        folded = store._fits_all_fn(g.label)(fits)
-        assert folded.shape == () and bool(np.asarray(folded))
+        for variant in ("async_queued", "async_full"):
+            lowered = store._build_update_many(
+                (g.label,), (variant,)).lower((lv,), (red,))
+            assert_no_collectives(lowered, "many_" + variant)
+        outs, stacked = store._update_many_fn(
+            (g.label,), ("async_queued",))((lv,), (red,))
+        # one row per group, one flag column per device
+        assert stacked.shape == (1, 8), stacked.shape
+        assert workqueue.fold_fits_host(np.asarray(stacked)[0])
         print("PROGRAMS_OK")
     """, "PROGRAMS_OK", prelude=MESH_PRELUDE)
 
@@ -74,6 +79,9 @@ def test_sharded_queued_matrix_bitwise_vs_blocking_full(async_tick):
         orig = store._update_fn
         store._update_fn = lambda label, variant: (used.append(variant),
                                                    orig(label, variant))[1]
+        orig_many = store._update_many_fn
+        store._update_many_fn = lambda labels, variants: (
+            used.extend(variants), orig_many(labels, variants))[1]
         lv, red = drive(store, steps=8, seed=5)
         red = store.settle(red, lv)
         assert any("queued" in v for v in used), used
@@ -104,8 +112,8 @@ def test_sharded_async_hot_path_never_pays_queue_fits_round_trip():
             g.engine.queue_fits = boom
         lv, red = drive(store, steps=6, seed=2)
         g = next(iter(store.groups.values()))
-        assert g.pending is None or g.pending.fits.shape == (), \
-            "pending fit signal must be the folded scalar"
+        assert g.pending is None or g.pending.fits.shape == (1, 8), \
+            "pending fit signal must be the batched per-shard row"
         for g in store._protected():
             del g.engine.queue_fits          # settle may use the exact check
         red = store.settle(red, lv)
@@ -135,7 +143,7 @@ def test_sharded_overflow_on_one_shard_is_bitwise_safe():
             if async_on:
                 p = g.pending
                 assert p is not None and p.queued
-                jax.block_until_ready(p.fits)
+                store.sync_inflight()
                 red, rep = store.tick(lv, red, 2)
                 assert rep.overflowed and g.predicted_fits is False
             red = store.settle(red, lv)
@@ -144,6 +152,110 @@ def test_sharded_overflow_on_one_shard_is_bitwise_safe():
         assert_red_equal(outs[0], outs[1])
         print("OVERFLOW_OK")
     """, "OVERFLOW_OK", prelude=MESH_PRELUDE)
+
+
+def test_sharded_multigroup_tick_batches_one_launch_one_fetch():
+    """Tentpole acceptance: with TWO due vilamb groups on 8 devices, a due
+    tick dispatches exactly ONE batched update program covering both
+    groups and fetches ONE stacked fits vector shared by both pendings;
+    the per-group update programs never launch on the async tick path."""
+    run_snippet("""
+        from repro.core import LeafPolicy, ProtectedStore, RedundancyPolicy
+        pol = RedundancyPolicy(
+            default=LeafPolicy(mode="vilamb", period_steps=2,
+                               work_queue_frac=0.5),
+            rules=(("e", LeafPolicy(mode="vilamb", period_steps=2,
+                                    work_queue_frac=0.0)),),
+            lanes_per_block=128, async_tick=True, precompile=False)
+        store = ProtectedStore(pol, mesh=MESH).attach(make_leaves(),
+                                                      specs=SPECS)
+        groups = list(store._protected())
+        assert len(groups) == 2, [g.label for g in groups]
+        many_calls, single_calls = [], []
+        orig_many = store._update_many_fn
+        store._update_many_fn = lambda labels, variants: (
+            many_calls.append((labels, variants)),
+            orig_many(labels, variants))[1]
+        orig = store._update_fn
+        store._update_fn = lambda label, variant: (
+            single_calls.append((label, variant)),
+            orig(label, variant))[1]
+        lv = put(make_leaves())
+        red = store.init(lv)
+        for step in (1, 2, 3, 4):
+            evw = jnp.zeros((64,), bool).at[step].set(True)
+            eve = jnp.zeros((16,), bool).at[step].set(True)
+            red = store.on_write(red, events={"w": evw, "e": eve})
+            store.sync_inflight()
+            n_before = len(many_calls)
+            red, _ = store.tick(lv, red, step)
+            if step % 2 == 0:                  # both groups due
+                assert len(many_calls) == n_before + 1, many_calls
+                labels, variants = many_calls[-1]
+                assert sorted(labels) == sorted(g.label for g in groups)
+                pendings = [g.pending for g in groups]
+                assert all(p is not None for p in pendings)
+                # ONE stacked fits vector + ONE resolver event per batch
+                assert pendings[0].fits is pendings[1].fits
+                assert pendings[0].launched is pendings[1].launched
+                assert pendings[0].fits.shape == (2, 8), pendings[0].fits.shape
+            else:
+                assert len(many_calls) == n_before
+        assert not single_calls, single_calls
+        red = store.settle(red, lv)
+        assert sum(int(v.sum()) for v in store.scrub(lv, red).values()) == 0
+        print("MULTIGROUP_OK")
+    """, "MULTIGROUP_OK", prelude=MESH_PRELUDE)
+
+
+def test_sharded_dispatcher_thread_lifecycle():
+    """Satellite acceptance: the resolver thread exists only between the
+    first overlapped dispatch and the next flush/remesh handover — flush
+    joins it cleanly, and a remesh adoption never leaks it."""
+    run_snippet("""
+        import threading
+        from repro.launch.mesh import make_mesh
+
+        def dispatch_threads():
+            return [t for t in threading.enumerate()
+                    if t.name == "repro-dispatch" and t.is_alive()]
+
+        store = mesh_store(async_tick=True, period=1, precompile=False,
+                           remesh_bytes_per_tick=64 * 128 * 4)
+        assert store._dispatcher is None and not dispatch_threads()
+        lv, red = drive(store, steps=3, seed=7)
+        assert store._dispatcher is not None \
+            and store._dispatcher.thread.is_alive(), \
+            "overlapped dispatch must have spun up the resolver thread"
+        red = store.flush(lv, red, step=3)
+        assert store._dispatcher is None and not dispatch_threads(), \
+            "flush must join the resolver thread"
+        # Next overlapped dispatch re-creates it lazily...
+        step = 3
+        for step in (4, 5):
+            ev = jnp.zeros((64,), bool).at[step].set(True)
+            red = store.on_write(red, events={"w": ev})
+            red, _ = store.tick(lv, red, step)
+        assert store._dispatcher is not None
+        # ...and a remesh handover shuts it down before migrating, without
+        # leaking a thread across the geometry swap.
+        store.remesh(make_mesh((2, 2, 1), ("pod", "data", "model")),
+                     {"w": SPECS["w"], "e": SPECS["e"]})
+        while store.remeshing:
+            step += 1
+            ev = jnp.zeros((64,), bool).at[step % 64].set(True)
+            red = store.on_write(red, events={"w": ev})
+            red, rep = store.tick(lv, red, step)
+            if rep.repaired:
+                lv = dict(lv, **rep.repaired)
+            assert step < 80, "remesh never finished"
+        assert len(dispatch_threads()) <= 1, \
+            "remesh must not leak resolver threads"
+        red = store.flush(lv, red, step=step)
+        assert store._dispatcher is None and not dispatch_threads()
+        assert sum(int(v.sum()) for v in store.scrub(lv, red).values()) == 0
+        print("LIFECYCLE_OK")
+    """, "LIFECYCLE_OK", prelude=MESH_PRELUDE)
 
 
 def test_tiny_mesh_dryrun_all_kinds():

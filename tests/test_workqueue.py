@@ -148,9 +148,8 @@ def test_store_tick_dispatches_queued_and_matches_reference():
             r1, rep = store.tick(lv, r0, step)
             assert rep.updated
             r0 = r1
-            g = next(iter(store.groups.values()))
-            if g.pending is not None:   # deterministic resolution timing
-                jax.block_until_ready(g.pending.fits)
+            # deterministic resolution timing (joins the launch thread too)
+            store.sync_inflight()
         if frac > 0:
             g = next(iter(store.groups.values()))
             if store.policy.async_tick:    # overlap: speculation went queued
